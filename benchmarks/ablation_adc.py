@@ -1,0 +1,46 @@
+"""Paper §3.3 ablation: symmetric BQ navigation vs ADC navigation.
+
+Claim to validate: ADC costs far more per hop (decode + float mac vs
+XOR/popcount) for a small recall gain — "symmetric + rerank achieves a
+strictly better Pareto trade-off" (paper: 9.4x QPS drop for +3.2%
+recall; constants differ off-SIMD, ordering should hold).
+"""
+
+from __future__ import annotations
+
+from repro.core.baselines import recall_at_k
+
+from benchmarks.common import dataset, emit, ground_truth, index_for, \
+    timed_search
+
+NAME = "cohere-surrogate"
+EF = 64
+
+
+def run() -> list[dict]:
+    rows = []
+    idx, _ = index_for(NAME)
+    _, queries = dataset(NAME)
+    gt = ground_truth(NAME)
+    out = {}
+    for nav in ("bq2", "adc"):
+        pred, spq = timed_search(idx, queries, ef=EF, nav=nav)
+        out[nav] = (recall_at_k(pred, gt), spq)
+        rows.append({
+            "name": f"ablation_adc/{nav}",
+            "us_per_call": round(spq * 1e6, 1),
+            "recall_at_10": round(out[nav][0], 4),
+            "qps": round(1.0 / spq, 1),
+        })
+    rows.append({
+        "name": "ablation_adc/summary",
+        "us_per_call": "",
+        "qps_ratio_sym_over_adc": round(out["adc"][1] / out["bq2"][1], 2),
+        "recall_delta_adc_minus_sym": round(out["adc"][0] - out["bq2"][0],
+                                            4),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "ablation_adc")

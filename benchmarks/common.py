@@ -1,0 +1,84 @@
+"""Shared benchmark plumbing: timing, dataset/index caches, CSV rows."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import flat_search, recall_at_k
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.data.datasets import make_dataset
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+# benchmark scale (1M in the paper; reduced for the CPU container —
+# override with REPRO_BENCH_N)
+import os
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", 10_000))
+BENCH_Q = int(os.environ.get("REPRO_BENCH_Q", 200))
+
+DEFAULT_PARAMS = BuildParams(
+    m=16, ef_construction=96, prune_pool=96, chunk=256
+)
+
+_dataset_cache: dict = {}
+_index_cache: dict = {}
+_gt_cache: dict = {}
+
+
+def dataset(name: str, n: int = None, q: int = None):
+    n, q = n or BENCH_N, q or BENCH_Q
+    key = (name, n, q)
+    if key not in _dataset_cache:
+        _dataset_cache[key] = make_dataset(name, n=n, queries=q)
+    return _dataset_cache[key]
+
+
+def index_for(name: str, params: BuildParams = None, **build_kw):
+    params = params or DEFAULT_PARAMS
+    key = (name, params, tuple(sorted(build_kw.items())))
+    if key not in _index_cache:
+        base, _ = dataset(name)
+        t0 = time.perf_counter()
+        idx = QuIVerIndex.build(jnp.asarray(base), params, **build_kw)
+        bt = time.perf_counter() - t0
+        _index_cache[key] = (idx, bt)
+    return _index_cache[key]
+
+
+def ground_truth(name: str, k: int = 10):
+    key = (name, k)
+    if key not in _gt_cache:
+        base, queries = dataset(name)
+        _gt_cache[key] = flat_search(base, queries, k=k)[0]
+    return _gt_cache[key]
+
+
+def timed_search(idx, queries, *, ef: int, k: int = 10, nav="bq2",
+                 repeats: int = 2):
+    """Returns (pred_ids, seconds_per_query)."""
+    q = jnp.asarray(queries)
+    pred, _ = idx.search(q, k=k, ef=ef, nav=nav)          # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        pred, _ = idx.search(q, k=k, ef=ef, nav=nav)
+    dt = (time.perf_counter() - t0) / repeats / len(queries)
+    return pred, dt
+
+
+def emit(rows: list[dict], table: str):
+    """Print the harness CSV and persist the JSON artifact."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"{table}.json").write_text(json.dumps(rows, indent=2))
+    for r in rows:
+        us = r.get("us_per_call", "")
+        derived = ";".join(
+            f"{k}={v}" for k, v in r.items()
+            if k not in ("name", "us_per_call")
+        )
+        print(f"{r['name']},{us},{derived}")

@@ -1,0 +1,64 @@
+"""Paper §4.1: batch concurrent construction — scaling + chunk ablation.
+
+Claims to validate: build time scales ~linearly in N (each chunk does
+bounded work), chunk size trades per-chunk dispatch overhead against
+graph staleness (recall impact small), and construction never touches
+float32 vectors (asserted structurally: the build path only consumes
+packed signatures).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from repro.core.baselines import recall_at_k
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+
+from benchmarks.common import dataset, emit, ground_truth, timed_search
+
+NAME = "cohere-surrogate"
+
+
+def run() -> list[dict]:
+    rows = []
+    base, queries = dataset(NAME)
+    gt = ground_truth(NAME)
+
+    for n in (2500, 5000, 10000):
+        sub = base[:n]
+        t0 = time.perf_counter()
+        QuIVerIndex.build(
+            jnp.asarray(sub),
+            BuildParams(m=16, ef_construction=96, prune_pool=96,
+                        chunk=256),
+        )
+        dt = time.perf_counter() - t0
+        rows.append({
+            "name": f"construction/scale_n{n}",
+            "us_per_call": round(dt * 1e6 / n, 1),   # per inserted node
+            "build_s": round(dt, 1),
+        })
+
+    for chunk in (128, 512):
+        t0 = time.perf_counter()
+        idx = QuIVerIndex.build(
+            jnp.asarray(base),
+            BuildParams(m=16, ef_construction=96, prune_pool=96,
+                        chunk=chunk),
+        )
+        dt = time.perf_counter() - t0
+        pred, _ = timed_search(idx, queries, ef=64, repeats=1)
+        rows.append({
+            "name": f"construction/chunk{chunk}",
+            "us_per_call": round(dt * 1e6 / len(base), 1),
+            "build_s": round(dt, 1),
+            "recall_ef64": round(recall_at_k(pred, gt), 4),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "construction")

@@ -1,0 +1,79 @@
+"""Hot-kernel microbenchmarks + TPU roofline projection.
+
+The Pallas kernels execute in interpret mode on CPU (correctness, not
+speed), so wall-clock here times the pure-jnp hot path; the ``derived``
+column projects TPU v5e performance from first principles:
+
+    symmetric BQ distance streams (2W words x 4 B) per base row
+      -> pairs/s at HBM roofline = 819 GB/s / (D/4 B)
+    vs float32 dot: 4D B per row -> 16x fewer pairs/s at the same
+    bandwidth — the TPU restatement of the paper's "20x cheaper per
+    hop" claim (theirs is compute-bound AVX-512; ours is bandwidth-
+    bound VPU, and the 16x is exactly the compression ratio).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bq
+from repro.kernels import ops
+
+from benchmarks.common import emit
+
+HBM_BW = 819e9
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for dim in (384, 768, 1536):
+        n = 100_000
+        base = jnp.asarray(rng.standard_normal((n, dim)), jnp.float32)
+        sigs = bq.encode(base)
+        q = bq.encode(base[:8])
+
+        fn = jax.jit(lambda a, b: bq.pairwise_distance(
+            bq.Signature(a, dim), bq.Signature(b, dim)))
+        fn(q.words, sigs.words).block_until_ready()
+        t0 = time.perf_counter()
+        fn(q.words, sigs.words).block_until_ready()
+        dt = time.perf_counter() - t0
+        pairs = 8 * n
+        bytes_per_row = sigs.words.shape[-1] * 4
+        tpu_pairs_per_s = HBM_BW / bytes_per_row
+        f32_pairs_per_s = HBM_BW / (4 * dim)
+        rows.append({
+            "name": f"kernel/bq_distance_d{dim}",
+            "us_per_call": round(dt * 1e6, 1),
+            "cpu_mpairs_per_s": round(pairs / dt / 1e6, 1),
+            "tpu_roofline_mpairs_per_s": round(tpu_pairs_per_s / 1e6, 1),
+            "tpu_f32_roofline_mpairs_per_s": round(f32_pairs_per_s / 1e6,
+                                                   1),
+            "bq_vs_f32_bandwidth_advantage": round(
+                tpu_pairs_per_s / f32_pairs_per_s, 1),
+        })
+
+        # binarize throughput (stage-0 bulk pre-installation)
+        x32 = base[:20_000]
+        enc = jax.jit(lambda v: bq.encode(v).words)
+        enc(x32).block_until_ready()
+        t0 = time.perf_counter()
+        enc(x32).block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append({
+            "name": f"kernel/binarize_d{dim}",
+            "us_per_call": round(dt * 1e6 / len(x32), 2),
+            "cpu_mvecs_per_s": round(len(x32) / dt / 1e6, 2),
+            "tpu_roofline_mvecs_per_s": round(
+                HBM_BW / (4 * dim) / 1e6, 1),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "kernel_bench")

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [table5 table7 ...]
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract) and
+writes JSON artifacts to experiments/bench/.  Scale via REPRO_BENCH_N
+(default 10k vectors; the paper uses 1M — constants scale, orderings
+don't).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    ablation_adc,
+    ablation_bits,
+    construction,
+    kernel_bench,
+    table2_memory,
+    table5_recall_qps,
+    table6_baselines,
+    table7_boundary,
+)
+from benchmarks.common import emit
+
+TABLES = {
+    "kernel_bench": kernel_bench,
+    "table2": table2_memory,
+    "table5": table5_recall_qps,
+    "table6": table6_baselines,
+    "table7": table7_boundary,
+    "ablation_adc": ablation_adc,
+    "ablation_bits": ablation_bits,
+    "construction": construction,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.perf_counter()
+        rows = TABLES[name].run()
+        emit(rows, name)
+        print(f"# {name} done in {time.perf_counter()-t0:.0f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

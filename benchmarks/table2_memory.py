@@ -1,0 +1,58 @@
+"""Paper Table 2: hot/cold memory breakdown + dimensionality invariance.
+
+Measured at bench scale and extrapolated analytically to the paper's
+1M-vector setting; claims to validate: hot = signatures (N*D/4 B) +
+adjacency (dimension-independent), cold = 4*N*D B, hot grows ~1.46x
+over a 4x dimensionality range while cold grows 4x.
+"""
+
+from __future__ import annotations
+
+from repro.core import bq
+from repro.core.vamana import BuildParams
+
+from benchmarks.common import BENCH_N, emit, index_for
+
+DIMS = {"minilm-surrogate": 384, "cohere-surrogate": 768,
+        "dbpedia-surrogate": 1536}
+
+
+def analytic_1m(dim: int, m: int = 32, slack: int = 8) -> dict:
+    n = 1_000_000
+    sig = bq.signature_bytes(n, dim)
+    adj = n * (2 * m + slack) * 4 + n * 4
+    cold = n * dim * 4
+    return {"sig_mb": sig / 2**20, "adj_mb": adj / 2**20,
+            "hot_mb": (sig + adj) / 2**20, "cold_mb": cold / 2**20}
+
+
+def run() -> list[dict]:
+    rows = []
+    hot = {}
+    for name, dim in DIMS.items():
+        idx, _ = index_for(name)
+        mem = idx.memory_breakdown()
+        a = analytic_1m(dim)
+        hot[dim] = a["hot_mb"]
+        rows.append({
+            "name": f"table2/{name}",
+            "us_per_call": "",
+            "dim": dim,
+            "measured_hot_mb": round(mem["hot_total_bytes"] / 2**20, 1),
+            "measured_cold_mb": round(mem["cold_vector_bytes"] / 2**20, 1),
+            "analytic_1m_hot_mb": round(a["hot_mb"], 0),
+            "analytic_1m_cold_mb": round(a["cold_mb"], 0),
+            "n": BENCH_N,
+        })
+    rows.append({
+        "name": "table2/dim-invariance",
+        "us_per_call": "",
+        "hot_growth_384_to_1536": round(hot[1536] / hot[384], 2),
+        "cold_growth_384_to_1536": 4.0,
+        "paper_hot_growth": 1.46,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "table2")

@@ -1,0 +1,48 @@
+"""Paper Table 7 / Fig 3: the applicability boundary across nine
+distribution tiers.
+
+Claims to validate: four-tier gradient (contrastive SOTA > multimodal
+CLIP > cosine-native non-contrastive ~ low-rank synthetic > Euclidean-
+native/random collapse), Finding 2 (recall monotone in ef everywhere),
+Finding 4 (Synthetic-LR sits strictly between Random-Sphere and the
+contrastive tier with everything else held fixed).
+"""
+
+from __future__ import annotations
+
+from repro.core.baselines import recall_at_k
+
+from benchmarks.common import (
+    dataset, emit, ground_truth, index_for, timed_search,
+)
+
+DATASETS = [
+    "random-sphere", "gist-like", "sift-like", "synthetic-lr",
+    "glove-like", "redcaps-surrogate", "minilm-surrogate",
+    "cohere-surrogate", "dbpedia-surrogate",
+]
+
+
+def run() -> list[dict]:
+    rows = []
+    for name in DATASETS:
+        idx, build_s = index_for(name)
+        _, queries = dataset(name)
+        gt = ground_truth(name)
+        r_by_ef = {}
+        for ef in (64, 256):
+            pred, spq = timed_search(idx, queries, ef=ef)
+            r_by_ef[ef] = recall_at_k(pred, gt)
+        rows.append({
+            "name": f"table7/{name}",
+            "us_per_call": round(spq * 1e6, 1),
+            "recall_ef64": round(r_by_ef[64], 4),
+            "recall_ef256": round(r_by_ef[256], 4),
+            "monotone": r_by_ef[256] >= r_by_ef[64] - 0.02,
+            "build_s": round(build_s, 1),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "table7")

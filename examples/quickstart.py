@@ -1,0 +1,57 @@
+"""Quickstart: build a QuIVer index, search it, inspect the hot path.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import flat_search, recall_at_k
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.data.datasets import make_dataset
+
+
+def main():
+    # 1. data: a contrastive-embedding surrogate (the paper's sweet spot)
+    base, queries = make_dataset("cohere-surrogate", n=5000, queries=50)
+    print(f"base {base.shape}, queries {queries.shape}")
+
+    # 2. build — everything happens in 2-bit Sign-Magnitude space
+    t0 = time.perf_counter()
+    index = QuIVerIndex.build(
+        jnp.asarray(base),
+        BuildParams(m=16, ef_construction=96, prune_pool=96, chunk=256),
+    )
+    print(f"built in {time.perf_counter()-t0:.1f}s "
+          f"({index.build_stats.chunks} chunks, "
+          f"mean {index.build_stats.mean_hops:.1f} hops/insert)")
+
+    # 3. hot/cold memory split (paper Table 2)
+    mem = index.memory_breakdown()
+    print(f"hot {mem['hot_total_bytes']/2**20:.1f} MB "
+          f"(sigs {mem['hot_signature_bytes']/2**20:.1f} MB + adjacency) "
+          f"vs cold {mem['cold_vector_bytes']/2**20:.1f} MB float32")
+
+    # 4. search: symmetric BQ beam + float32 rerank
+    for ef in (16, 64, 256):
+        t0 = time.perf_counter()
+        ids, scores = index.search(jnp.asarray(queries), k=10, ef=ef)
+        dt = (time.perf_counter() - t0) / len(queries)
+        gt, _ = flat_search(base, queries, k=10)
+        print(f"ef={ef:4d}: recall@10={recall_at_k(ids, gt):.3f} "
+              f"{dt*1e3:.1f} ms/query")
+
+    # 5. persistence
+    index.save("/tmp/quiver_index.npz")
+    loaded = QuIVerIndex.load("/tmp/quiver_index.npz")
+    ids2, _ = loaded.search(jnp.asarray(queries), k=10, ef=64)
+    print("save/load roundtrip OK:",
+          bool((ids2 == index.search(jnp.asarray(queries), k=10, ef=64)[0])
+               .all()))
+
+
+if __name__ == "__main__":
+    main()

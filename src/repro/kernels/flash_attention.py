@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blockwise-softmax (flash) attention.
+
+The LM-side perf-critical layer (prefill cells are memory-bound on
+attention score traffic — EXPERIMENTS.md §Roofline). Grid is
+(batch*heads, q-blocks); each cell streams KV in ``block_kv`` slices
+with the online max/denominator recurrence, so VMEM holds one
+(block_q x hd) query tile + one (block_kv x hd) KV tile + the running
+accumulator. MXU does the two matmuls per tile; the mask is computed
+from iota on the VPU.
+
+Caller contract (see ``ops.flash_attention_tpu``): GQA is MHA-ized
+before the kernel (matches the train-path layout decision, DESIGN.md
+§7.5); layouts are (B*H, T, hd) with hd a multiple of 128 preferred.
+Validated against ``ref.flash_attention_ref`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int,
+                  causal: bool, scale: float, kv_len: int):
+    """One (1, block_q, hd) output tile; streams KV in block_kv slices."""
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    bq = q.shape[0]
+    tk = k_ref.shape[1]
+    n_kv = tk // block_kv
+    q_block = pl.program_id(1)
+    q_pos = q_block * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(j, carry):
+        acc, m, d = carry
+        k = jax.lax.dynamic_slice_in_dim(
+            k_ref[0], j * block_kv, block_kv, axis=0
+        ).astype(jnp.float32)                          # (bkv, hd)
+        v = jax.lax.dynamic_slice_in_dim(
+            v_ref[0], j * block_kv, block_kv, axis=0
+        ).astype(jnp.float32)
+        s = q @ k.T                                    # (bq, bkv)
+        k_pos = j * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        mask = k_pos[None, :] < kv_len                 # padded KV rows
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        acc = acc * corr[:, None] + p @ v
+        d = d * corr + p.sum(axis=-1)
+        return acc, m_new, d
+
+    hd = q.shape[-1]
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, d = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, d0))
+    o_ref[0] = (acc / jnp.maximum(d, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_kv", "causal", "interpret",
+                     "kv_len"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,       # (BH, Tq, hd)
+    k: jnp.ndarray,       # (BH, Tk, hd)
+    v: jnp.ndarray,       # (BH, Tk, hd)
+    *,
+    block_q: int = 128,
+    block_kv: int = 128,
+    causal: bool = True,
+    interpret: bool = True,
+    kv_len: int | None = None,
+) -> jnp.ndarray:
+    bh, tq, hd = q.shape
+    tk = k.shape[1]
+    assert tq % block_q == 0 and tk % block_kv == 0, (tq, tk)
+    scale = hd ** -0.5
+    kv_len = kv_len if kv_len is not None else tk
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, block_kv=block_kv, causal=causal, scale=scale,
+            kv_len=kv_len,
+        ),
+        grid=(bh, tq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tk, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, tk, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

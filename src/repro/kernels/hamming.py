@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: 1-bit SimHash Hamming distance (QuIVer baseline).
+
+Same tiling strategy as ``bq_distance`` but over a single bit plane —
+used by the 1-bit ablation (§2.1 / §5) and as the cheapest navigation
+distance in the comparison suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(q_ref, base_ref, out_ref, *, w: int):
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.int32)
+    for i in range(w):
+        x = q_ref[:, i][:, None] ^ base_ref[:, i][None, :]
+        acc += jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_n", "interpret"))
+def hamming_distance_pallas(
+    q_words: jnp.ndarray,
+    base_words: jnp.ndarray,
+    *,
+    block_q: int = 8,
+    block_n: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(Q, W) x (N, W) uint32 sign planes -> (Q, N) int32 Hamming."""
+    q, w = q_words.shape
+    n = base_words.shape[0]
+    assert q % block_q == 0 and n % block_n == 0
+
+    return pl.pallas_call(
+        functools.partial(_hamming_kernel, w=w),
+        grid=(q // block_q, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.int32),
+        interpret=interpret,
+    )(q_words, base_words)

@@ -1,0 +1,126 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle shape padding (block divisibility), interpret-mode selection
+(Pallas executes in Python on CPU; compiled Mosaic on TPU), and the
+packed-word bookkeeping, so callers deal only in logical shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bq
+from repro.kernels.binarize import binarize_pallas
+from repro.kernels.bq_distance import bq_distance_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hamming import hamming_distance_pallas
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    target = ((n + mult - 1) // mult) * mult
+    if target != n:
+        pad = jnp.zeros((target - n, *x.shape[1:]), dtype=x.dtype)
+        x = jnp.concatenate([x, pad], axis=0)
+    return x, n
+
+
+def bq_distance(
+    q_words: jnp.ndarray,
+    base_words: jnp.ndarray,
+    dim: int,
+    *,
+    block_q: int = 8,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Symmetric 2-bit SM distances, (Q, 2W) x (N, 2W) -> (Q, N) int32."""
+    interpret = _auto_interpret(interpret)
+    mask = bq.valid_mask(dim)
+    qp, q = _pad_rows(q_words, block_q)
+    bp, n = _pad_rows(base_words, block_n)
+    out = bq_distance_pallas(
+        qp, bp, mask, dim=dim, block_q=block_q, block_n=block_n,
+        interpret=interpret,
+    )
+    return out[:q, :n]
+
+
+def hamming_distance(
+    q_words: jnp.ndarray,
+    base_words: jnp.ndarray,
+    *,
+    block_q: int = 8,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """1-bit Hamming distances over sign planes, (Q, W) x (N, W) -> (Q, N)."""
+    interpret = _auto_interpret(interpret)
+    qp, q = _pad_rows(q_words, block_q)
+    bp, n = _pad_rows(base_words, block_n)
+    out = hamming_distance_pallas(
+        qp, bp, block_q=block_q, block_n=block_n, interpret=interpret
+    )
+    return out[:q, :n]
+
+
+def binarize(
+    x: jnp.ndarray,
+    *,
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> bq.Signature:
+    """(N, D) float32 -> packed Signature via the fused Pallas pass."""
+    interpret = _auto_interpret(interpret)
+    n, d = x.shape
+    d_pad = bq.n_words(d) * bq.WORD_BITS
+    if d_pad != d:
+        x = jnp.concatenate(
+            [x, jnp.zeros((n, d_pad - d), dtype=x.dtype)], axis=-1
+        )
+    xp, n0 = _pad_rows(x, block_n)
+    words = binarize_pallas(
+        xp, true_dim=d, block_n=block_n, interpret=interpret
+    )
+    return bq.Signature(words=words[:n0], dim=d)
+
+
+def flash_attention_tpu(
+    q: jnp.ndarray,            # (B, T, H, hd) — GQA already MHA-ized
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Pallas flash attention behind the model-layer layout."""
+    interpret = _auto_interpret(interpret)
+    b, t, h, hd = q.shape
+    tk = k.shape[1]
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+
+    pad_q = (-t) % block_q
+    pad_kv = (-tk) % block_kv
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_kv), (0, 0)))
+    out = flash_attention_pallas(
+        qf, kf, vf, block_q=block_q, block_kv=block_kv,
+        causal=causal, interpret=interpret, kv_len=tk,
+    )[:, :t]
+    return out.reshape(b, h, t, hd).transpose(0, 2, 1, 3)

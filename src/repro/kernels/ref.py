@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function has the exact calling convention of the
+corresponding kernel wrapper in ``ops.py`` and is used by the test suite
+as ground truth (``assert_allclose`` / exact integer equality).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bq
+
+
+def bq_distance_ref(
+    q_words: jnp.ndarray, base_words: jnp.ndarray, dim: int
+) -> jnp.ndarray:
+    """(Q, 2W) x (N, 2W) packed signatures -> (Q, N) int32 distances."""
+    q = bq.Signature(words=q_words, dim=dim)
+    b = bq.Signature(words=base_words, dim=dim)
+    return bq.pairwise_distance(q, b)
+
+
+def hamming_distance_ref(
+    q_words: jnp.ndarray, base_words: jnp.ndarray, dim: int
+) -> jnp.ndarray:
+    """1-bit plane Hamming distance, (Q, W) x (N, W) -> (Q, N) int32."""
+    x = q_words[:, None, :] ^ base_words[None, :, :]
+    import jax
+
+    return jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+
+
+def binarize_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """(N, D) float32 -> (N, 2W) packed uint32 2-bit SM signatures."""
+    return bq.encode(x).words
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """(BH, Tq, hd) x (BH, Tk, hd) -> (BH, Tq, hd), naive softmax."""
+    import jax
+    import numpy as np
+
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        tq, tk = q.shape[1], k.shape[1]
+        mask = jnp.arange(tk)[None, :] <= jnp.arange(tq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,83 @@
+"""Training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+``--smoke`` trains the reduced config on local devices; the full config
+path expects a real fleet (device count >= mesh size) and otherwise
+exits after printing the plan — the dry-run (``repro.launch.dryrun``)
+is the no-hardware validation path.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "wsd"])
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    elif len(jax.devices()) < 256:
+        print(f"[train] full config {cfg.name} needs a production mesh; "
+              f"found {len(jax.devices())} devices. Use --smoke locally "
+              f"or repro.launch.dryrun for no-hardware validation.")
+        return
+
+    # minicpm's paper schedule is WSD; honor it by default
+    schedule = "wsd" if "minicpm" in cfg.name else args.schedule
+
+    bundle = build_model(cfg)
+    tc = TrainConfig(
+        n_micro=args.n_micro,
+        peak_lr=args.lr,
+        total_steps=args.steps,
+        schedule=schedule,
+        adamw=AdamWConfig(),
+        compress_grads=args.compress_grads,
+    )
+    pipeline = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+    ))
+    trainer = Trainer(
+        bundle, tc,
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every),
+        pipeline,
+    )
+    result = trainer.run()
+    for m in result["metrics"]:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.3f}  {m['seconds']*1e3:.0f} ms")
+    print(f"[train] done at step {result['final_step']}; "
+          f"stragglers flagged: {len(result['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder backbone (modality frontend stubbed).
+
+The conv stem is a stub: ``input_specs`` feeds precomputed frame
+embeddings (B, S_enc, d_model); a linear adapter stands in for the
+stem's output projection.  Encoder layers are bidirectional; decoder
+layers are causal self-attention + cross-attention over the encoder
+output.  Serving caches: per-decoder-layer self KV + precomputed cross
+KV (computed once from the encoder output at prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models.layers import (
+    embed,
+    init_embedding,
+    init_linear,
+    init_norm,
+    linear,
+    rmsnorm,
+    sinusoidal_positions,
+)
+
+
+class EncDecCaches(NamedTuple):
+    self_kv: attn_mod.KVCache        # (L, B, S_dec, K, hd)
+    cross_kv: attn_mod.KVCache       # (L, B, S_enc, K, hd)
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(cfg.d_model),
+        "attn": attn_mod.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        ),
+        "ln2": init_norm(cfg.d_model),
+        "mlp": ffn_mod.init_ffn(
+            ks[1], cfg.d_model, cfg.d_ff, activation=cfg.activation
+        ),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg.d_model),
+        "attn": attn_mod.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        ),
+        "ln_x": init_norm(cfg.d_model),
+        "xattn": attn_mod.init_cross_attention(
+            ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        ),
+        "ln2": init_norm(cfg.d_model),
+        "mlp": ffn_mod.init_ffn(
+            ks[2], cfg.d_model, cfg.d_ff, activation=cfg.activation
+        ),
+    }
+
+
+def init_encdec(key, cfg) -> dict:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    enc_layers = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_init_enc_layer(k, cfg) for k in enc_keys],
+    )
+    dec_layers = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_init_dec_layer(k, cfg) for k in dec_keys],
+    )
+    return {
+        "frontend_adapter": init_linear(ks[2], cfg.d_model, cfg.d_model),
+        "embed": init_embedding(ks[3], cfg.padded_vocab, cfg.d_model),
+        "enc_layers": enc_layers,
+        "enc_norm": init_norm(cfg.d_model),
+        "dec_layers": dec_layers,
+        "dec_norm": init_norm(cfg.d_model),
+        "lm_head": init_linear(ks[4], cfg.d_model, cfg.padded_vocab),
+    }
+
+
+def encode(params, cfg, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, d) stub embeddings -> encoder output."""
+    b, s, d = frames.shape
+    x = linear(params["frontend_adapter"], frames)
+    x = x + sinusoidal_positions(s, d)[None].astype(x.dtype)
+    x = shard(x, "dp", "tp", None)
+
+    def body(h, layer):
+        a, _ = attn_mod.attention_forward(
+            layer["attn"], rmsnorm(layer["ln1"], h, cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, causal=False, kv_chunk=cfg.kv_chunk,
+        )
+        h = h + a
+        h = h + ffn_mod.ffn(
+            layer["mlp"], rmsnorm(layer["ln2"], h, cfg.norm_eps),
+            activation=cfg.activation,
+        )
+        return shard(h, "dp", "tp", None), None
+
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable
+    ) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer_apply(layer, h, cfg, *, enc_out=None, cross_kv=None,
+                     self_cache=None, cache_pos=None):
+    a, new_self = attn_mod.attention_forward(
+        layer["attn"], rmsnorm(layer["ln1"], h, cfg.norm_eps),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_, causal=True, kv_chunk=cfg.kv_chunk,
+        cache=self_cache, cache_pos=cache_pos,
+    )
+    h = h + a
+    if cross_kv is None:
+        cross_kv = attn_mod.cross_attention_kv(
+            layer["xattn"], enc_out,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        )
+    h = h + attn_mod.cross_attention_forward(
+        layer["xattn"], rmsnorm(layer["ln_x"], h, cfg.norm_eps), cross_kv,
+        n_heads=cfg.n_heads, head_dim=cfg.head_dim_, kv_chunk=cfg.kv_chunk,
+    )
+    h = h + ffn_mod.ffn(
+        layer["mlp"], rmsnorm(layer["ln2"], h, cfg.norm_eps),
+        activation=cfg.activation,
+    )
+    return shard(h, "dp", "tp", None), new_self
+
+
+def decode_train(params, cfg, tokens, enc_out) -> jnp.ndarray:
+    """Teacher-forced decoder pass -> hidden states (B, S_dec, d)."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens)
+    x = x + sinusoidal_positions(s, cfg.d_model)[None].astype(x.dtype)
+    x = shard(x, "dp", "tp", None)
+
+    def body(h, layer):
+        h, _ = _dec_layer_apply(layer, h, cfg, enc_out=enc_out)
+        return h, None
+
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable
+    ) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    return rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+
+
+def make_cross_kv(params, cfg, enc_out) -> attn_mod.KVCache:
+    """Precompute per-layer cross K/V from encoder output (prefill)."""
+    def body(_, layer):
+        kv = attn_mod.cross_attention_kv(
+            layer["xattn"], enc_out,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        )
+        return None, kv
+
+    _, kvs = jax.lax.scan(body, None, params["dec_layers"])
+    return kvs                                    # leading dim L
+
+
+def decode_with_cache(params, cfg, tokens, caches: EncDecCaches, cache_pos):
+    """Prefill (T>1) or single-token decode (T==1) for the decoder."""
+    b, t = tokens.shape
+    x = embed(params["embed"], tokens)
+    table = sinusoidal_positions(caches.self_kv.k.shape[2], cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        table, jnp.asarray(cache_pos), t, axis=0
+    )[None].astype(x.dtype)
+
+    def body(h, xs):
+        layer, self_kv, cross_kv = xs
+        h, new_self = _dec_layer_apply(
+            layer, h, cfg, cross_kv=cross_kv,
+            self_cache=self_kv, cache_pos=cache_pos,
+        )
+        return h, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], caches.self_kv, caches.cross_kv)
+    )
+    x = rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return x, EncDecCaches(self_kv=new_self, cross_kv=caches.cross_kv)
+
+
+def init_encdec_caches(cfg, b: int, s_dec: int, s_enc: int,
+                       dtype=jnp.bfloat16) -> EncDecCaches:
+    l = cfg.n_dec_layers
+    mk = lambda s: attn_mod.KVCache(
+        k=jnp.zeros((l, b, s, cfg.n_kv_heads, cfg.head_dim_), dtype),
+        v=jnp.zeros((l, b, s, cfg.n_kv_heads, cfg.head_dim_), dtype),
+    )
+    return EncDecCaches(self_kv=mk(s_dec), cross_kv=mk(s_enc))

@@ -1,0 +1,34 @@
+"""Dense feed-forward variants: SwiGLU (llama-family), squared-ReLU
+(nemotron), GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.layers import ACTIVATIONS, init_linear, linear, silu
+
+
+def init_ffn(key, d_model: int, d_ff: int, *, activation: str = "swiglu",
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "w1": init_linear(ks[0], d_model, d_ff, dtype=dtype),   # gate
+            "w3": init_linear(ks[1], d_model, d_ff, dtype=dtype),   # up
+            "w2": init_linear(ks[2], d_ff, d_model, dtype=dtype),   # down
+        }
+    return {
+        "w1": init_linear(ks[0], d_model, d_ff, dtype=dtype),
+        "w2": init_linear(ks[1], d_ff, d_model, dtype=dtype),
+    }
+
+
+def ffn(p: dict, x: jnp.ndarray, *, activation: str = "swiglu") -> jnp.ndarray:
+    if activation == "swiglu":
+        h = silu(linear(p["w1"], x)) * linear(p["w3"], x)
+    else:
+        h = ACTIVATIONS[activation](linear(p["w1"], x))
+    h = shard(h, "dp", None, "tp")
+    return linear(p["w2"], h)

@@ -1,0 +1,109 @@
+"""Shared building blocks: norms, linears, embeddings, rotary, activations.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every init
+function takes a PRNG key and returns the param subtree.  Compute dtype
+is bf16 by default with fp32 accumulation at reductions (norms, softmax,
+loss); param dtype is configurable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_linear(key, d_in: int, d_out: int, *, dtype=jnp.bfloat16,
+                scale: float | None = None) -> dict:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"]
+
+
+def init_norm(d: int, *, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"]).astype(x.dtype)
+
+
+def init_layernorm(d: int, *, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, *, dtype=jnp.bfloat16) -> dict:
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"w": w.astype(dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["w"][tokens]
+
+
+# -- rotary -----------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., T, H, hd); positions: (..., T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..,T,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..,T,1,hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(t: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (T, d)."""
+    pos = np.arange(t)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angles = pos / (10000 ** (2 * i / d))
+    out = np.concatenate([np.sin(angles), np.cos(angles)], axis=-1)
+    return jnp.asarray(out, dtype=jnp.float32)
+
+
+# -- activations -------------------------------------------------------------
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def squared_relu(x):
+    r = jnp.maximum(x, 0)
+    return r * r
+
+
+ACTIVATIONS = {
+    "silu": silu,
+    "gelu": jax.nn.gelu,
+    "squared_relu": squared_relu,
+}

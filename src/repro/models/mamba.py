@@ -1,0 +1,143 @@
+"""Mamba (S6) selective state-space layer — Jamba's recurrent block.
+
+Training/prefill uses ``jax.lax.associative_scan`` over time (parallel
+prefix over the diagonal SSM recurrence); decode is the O(1)-state
+single-step update.  The causal depthwise conv (width 4) is expressed as
+shifted adds, which lowers to cheap pad+slice HLO everywhere.
+
+State for serving: (conv_state (B, d_conv-1, d_inner),
+                    ssm_state (B, d_inner, d_state)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from repro.models.layers import init_linear, linear, silu
+
+
+def init_mamba(key, d_model: int, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None,
+               dtype=jnp.bfloat16) -> dict:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(16, d_model // 16)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.tile(
+        jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+        (d_inner, 1),
+    )
+    return {
+        "in_proj": init_linear(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (d_conv, 1, d_inner), jnp.float32)
+            / np.sqrt(d_conv)
+        ).astype(dtype),
+        "x_proj": init_linear(ks[2], d_inner, dt_rank + 2 * d_state,
+                              dtype=dtype),
+        "dt_proj": init_linear(ks[3], dt_rank, d_inner, dtype=dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_linear(ks[5], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 prev: jnp.ndarray | None = None):
+    """Depthwise causal conv via shifted adds.
+
+    x: (B, T, d_inner); w: (width, 1, d_inner).
+    prev: (B, width-1, d_inner) carry-in for decode/prefill chunking.
+    Returns (y, new_prev) where new_prev holds the last width-1 inputs.
+    """
+    width = w.shape[0]
+    b, t, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((b, width - 1, d), dtype=x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)            # (B, T+width-1, d)
+    y = jnp.zeros((b, t, d), dtype=jnp.float32)
+    for i in range(width):
+        y = y + xp[:, i:i + t, :].astype(jnp.float32) * w[i, 0][None, None, :]
+    new_prev = xp[:, t:, :] if width > 1 else prev
+    return y.astype(x.dtype), new_prev
+
+
+def _ssm_scan(u, dt, a, b_mat, c_mat, d_skip, h0=None):
+    """Selective scan.  u,dt: (B,T,di); b,c: (B,T,ds); a: (di,ds)."""
+    # discretize
+    da = jnp.exp(dt[..., None] * a[None, None])                 # (B,T,di,ds)
+    db_u = (dt * u)[..., None] * b_mat[:, :, None, :]           # (B,T,di,ds)
+    if h0 is not None:
+        # fold the incoming state in as a virtual first step
+        da0 = jnp.ones_like(h0)[:, None]                        # (B,1,di,ds)
+        da = jnp.concatenate([da0, da], axis=1)
+        db_u = jnp.concatenate([h0[:, None], db_u], axis=1)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_acc, h = jax.lax.associative_scan(combine, (da, db_u), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    y = jnp.einsum("btds,bts->btd", h, c_mat) + u * d_skip[None, None]
+    return y, h[:, -1]                                           # last state
+
+
+def mamba(
+    p: dict,
+    x: jnp.ndarray,                       # (B, T, d_model)
+    *,
+    conv_state: jnp.ndarray | None = None,
+    ssm_state: jnp.ndarray | None = None,
+    return_state: bool = False,
+):
+    """Returns y (B,T,d) and, if requested, (conv_state, ssm_state)."""
+    d_inner = p["conv_w"].shape[-1]
+    d_state = p["a_log"].shape[-1]
+    dt_rank = p["x_proj"]["w"].shape[-1] - 2 * d_state
+
+    xz = linear(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "dp", None, "tp")
+
+    has_state = conv_state is not None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_state)
+    xin = silu(xin)
+
+    proj = linear(p["x_proj"], xin)
+    dt_in, b_mat, c_mat = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        linear(p["dt_proj"], dt_in).astype(jnp.float32)
+        + p["dt_bias"][None, None]
+    )
+    a = -jnp.exp(p["a_log"])
+
+    y, last_state = _ssm_scan(
+        xin.astype(jnp.float32), dt, a,
+        b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+        p["d_skip"],
+        h0=ssm_state if has_state else None,
+    )
+    y = (y.astype(x.dtype) * silu(z))
+    y = shard(y, "dp", None, "tp")
+    out = linear(p["out_proj"], y)
+    if return_state:
+        return out, (new_conv, last_state)
+    return out
+
+
+def init_mamba_state(b: int, d_model: int, *, d_state=16, d_conv=4,
+                     expand=2, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    return (
+        jnp.zeros((b, d_conv - 1, d_inner), dtype=dtype),
+        jnp.zeros((b, d_inner, d_state), dtype=jnp.float32),
+    )

@@ -1,0 +1,191 @@
+"""Model dispatcher: one uniform bundle per architecture.
+
+``build_model(cfg)`` returns a :class:`ModelBundle` exposing
+
+    init(key)                         -> params
+    loss(params, batch)               -> (loss, metrics)
+    prefill(params, batch, caches)    -> (last_logits, caches)
+    decode(params, tokens, caches, t) -> (logits, caches)
+    init_caches(b, max_seq)           -> serving state pytree
+    input_specs(shape)                -> {name: ShapeDtypeStruct} (global)
+
+Batch layouts (see DESIGN.md §4 frontends-as-stubs):
+    decoder LM : tokens (B,S) labels (B,S)
+    vlm        : patches (B,P,d) tokens (B,S-P) labels (B,S-P)
+    encdec     : frames (B,S,d) tokens (B,S//4) labels (B,S//4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import shard
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf
+from repro.models.layers import linear
+
+
+class ModelBundle(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_caches: Callable
+    input_specs: Callable
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-mean CE with label mask (labels < 0 ignored), fp32."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    loss = ((logz - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, mask.sum()
+
+
+# ---------------------------------------------------------------------------
+# decoder-only (dense / moe / hybrid / ssm / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _decoder_bundle(cfg: ArchConfig) -> ModelBundle:
+    is_vlm = cfg.frontend == "patch_stub"
+    n_front = cfg.n_frontend_tokens if is_vlm else 0
+
+    def init(key):
+        return tf.init_decoder(key, cfg)
+
+    def _embed_batch(params, batch):
+        x = tf.embed_tokens(params, cfg, batch["tokens"])
+        if is_vlm:
+            x = jnp.concatenate(
+                [batch["patches"].astype(x.dtype), x], axis=1
+            )
+        return x
+
+    def loss(params, batch):
+        x = _embed_batch(params, batch)
+        h, aux = tf.forward_hidden(params, cfg, x)
+        if n_front:
+            h = h[:, n_front:]
+        logits = tf.logits_from_hidden(params, cfg, h)
+        ce, n_tok = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        total = ce + 0.01 * aux["load_balance_loss"]
+        metrics = {
+            "ce": ce, "tokens": n_tok,
+            "load_balance_loss": aux["load_balance_loss"],
+            "dropped_fraction": aux["dropped_fraction"],
+        }
+        return total, metrics
+
+    def init_caches(b, max_seq):
+        return tf.init_caches(cfg, b, max_seq)
+
+    def prefill(params, batch, caches):
+        x = _embed_batch(params, batch)
+        h, caches = tf.forward_with_cache(params, cfg, x, caches, 0)
+        logits = tf.logits_from_hidden(params, cfg, h[:, -1:])
+        return logits[:, 0], caches
+
+    def decode(params, tokens, caches, pos):
+        x = tf.embed_tokens(params, cfg, tokens)
+        h, caches = tf.forward_with_cache(params, cfg, x, caches, pos)
+        logits = tf.logits_from_hidden(params, cfg, h[:, -1:])
+        return logits[:, 0], caches
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((b, s - n_front), jnp.int32)
+        specs = {"tokens": tok}
+        if is_vlm:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, n_front, cfg.d_model), jnp.bfloat16
+            )
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct(
+                (b, s - n_front), jnp.int32
+            )
+        if shape.kind == "decode":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return specs
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_caches,
+                       input_specs)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _encdec_bundle(cfg: ArchConfig) -> ModelBundle:
+    dec_ratio = 4   # audio frames per text token (training shapes)
+
+    def init(key):
+        return encdec_mod.init_encdec(key, cfg)
+
+    def loss(params, batch):
+        enc_out = encdec_mod.encode(params, cfg, batch["frames"])
+        h = encdec_mod.decode_train(params, cfg, batch["tokens"], enc_out)
+        logits = tf.logits_from_hidden(params, cfg, h)
+        ce, n_tok = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        return ce, {"ce": ce, "tokens": n_tok,
+                    "load_balance_loss": jnp.float32(0.0),
+                    "dropped_fraction": jnp.float32(0.0)}
+
+    def init_caches(b, max_seq):
+        # self KV sized for the decoder; cross KV sized for the encoder
+        return encdec_mod.init_encdec_caches(cfg, b, max_seq, max_seq)
+
+    def prefill(params, batch, caches):
+        enc_out = encdec_mod.encode(params, cfg, batch["frames"])
+        cross = encdec_mod.make_cross_kv(params, cfg, enc_out)
+        caches = encdec_mod.EncDecCaches(
+            self_kv=caches.self_kv, cross_kv=cross
+        )
+        h, caches = encdec_mod.decode_with_cache(
+            params, cfg, batch["tokens"], caches, 0
+        )
+        logits = tf.logits_from_hidden(params, cfg, h[:, -1:])
+        return logits[:, 0], caches
+
+    def decode(params, tokens, caches, pos):
+        h, caches = encdec_mod.decode_with_cache(
+            params, cfg, tokens, caches, pos
+        )
+        logits = tf.logits_from_hidden(params, cfg, h[:, -1:])
+        return logits[:, 0], caches
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        specs = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                           jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, s // dec_ratio), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct(
+                (b, s // dec_ratio), jnp.int32
+            )
+        return specs
+
+    return ModelBundle(cfg, init, loss, prefill, decode, init_caches,
+                       input_specs)
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family == "encdec":
+        return _encdec_bundle(cfg)
+    return _decoder_bundle(cfg)

@@ -1,0 +1,248 @@
+"""Mixture-of-Experts with capacity-based sort/gather dispatch.
+
+Dispatch is *gather-based* (argsort by expert + rank-within-group +
+capacity drop), not the dense one-hot-matmul formulation: the HLO FLOPs
+then reflect only real expert compute, which keeps the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio honest (a one-hot dispatch einsum would
+double-count dispatch as compute).
+
+Expert weights are stored (E, d, f) and sharded (None, dp, tp) — the
+expert count never has to divide a mesh axis (qwen2's 60 experts), while
+per-expert compute is TP-sharded on d_ff.  Shared experts (qwen2-moe)
+are a dense FFN of width n_shared * d_ff fused into one matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.dist.sharding import active_ctx, param_pspecs, shard
+from repro.models.layers import silu
+
+
+def init_moe(
+    key,
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    top_k: int,
+    *,
+    n_shared_experts: int = 0,
+    dtype=jnp.bfloat16,
+) -> dict:
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / np.sqrt(d_model)
+
+    def mat(k, shape, s):
+        return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+
+    p = {
+        "router": {
+            "w": jax.random.normal(
+                ks[0], (d_model, n_experts), jnp.float32
+            ) * scale,  # router stays fp32 for routing stability
+        },
+        "w1": mat(ks[1], (n_experts, d_model, d_ff), scale),
+        "w3": mat(ks[2], (n_experts, d_model, d_ff), scale),
+        "w2": mat(ks[3], (n_experts, d_ff, d_model), 1.0 / np.sqrt(d_ff)),
+    }
+    if n_shared_experts:
+        ds = n_shared_experts * d_ff
+        p["shared"] = {
+            "w1": mat(ks[4], (d_model, ds), scale),
+            "w3": mat(ks[5], (d_model, ds), scale),
+            "w2": mat(jax.random.fold_in(ks[4], 7), (ds, d_model),
+                      1.0 / np.sqrt(ds)),
+        }
+    return p
+
+
+def _row_moe(flat, p, *, top_k: int, cap: int, norm_topk: bool):
+    """Dispatch + expert compute for ONE batch row (T, d).
+
+    Keeping sort/gather/scatter indices *row-local* keeps every dispatch
+    op batch-sharded under vmap — a global flat dispatch makes XLA
+    all-gather full (tokens x d_model) activations around each sort/
+    scatter (measured: 275s collective term on qwen3 train_4k,
+    EXPERIMENTS.md §Perf iteration a.1).
+    """
+    n_tok, d = flat.shape
+    e = p["w1"].shape[0]
+
+    # --- routing (fp32) ----------------------------------------------------
+    logits = flat.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)     # (T, k)
+    if norm_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9
+        )
+
+    # --- capacity dispatch, gather-only formulation --------------------------
+    # GSPMD replicates scatter operands under vmap (measured +80s on the
+    # scatter form, §Perf iteration a.2); two argsorts + gathers + a
+    # sum-over-k partition cleanly instead.  No scatter ops anywhere.
+    n_pairs = n_tok * top_k
+    pairs_e = expert_idx.reshape(-1)                          # (P,)
+    pairs_tok = jnp.repeat(jnp.arange(n_tok), top_k)
+    pairs_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(pairs_e)
+    inv_order = jnp.argsort(order)
+    e_s = pairs_e[order]
+    tok_s = pairs_tok[order]
+
+    idx = jnp.arange(n_pairs)
+    boundary = jnp.concatenate([jnp.array([True]), e_s[1:] != e_s[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(boundary, idx, 0))
+    rank = idx - seg_start                                    # within expert
+    keep = rank < cap
+
+    # expert buffer via gather: slot (e, r) reads sorted pair seg[e]+r
+    starts = jnp.searchsorted(e_s, jnp.arange(e))             # (E,)
+    pos = starts[:, None] + jnp.arange(cap)[None, :]          # (E, cap)
+    pos_c = jnp.minimum(pos, n_pairs - 1)
+    valid = (pos < n_pairs) & (e_s[pos_c] == jnp.arange(e)[:, None])
+    src_tok = jnp.where(valid, tok_s[pos_c], n_tok)           # sentinel row
+    flat_pad = jnp.concatenate(
+        [flat, jnp.zeros((1, d), dtype=flat.dtype)], axis=0
+    )
+    buf = flat_pad[src_tok]                                   # (E, cap, d)
+
+    # --- expert compute (TP on d_ff) ----------------------------------------
+    h = silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w3"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+
+    # --- combine: gather back in original pair order -------------------------
+    rank_orig = rank[inv_order]
+    keep_orig = keep[inv_order]
+    slot_orig = jnp.where(
+        keep_orig, pairs_e * cap + rank_orig, e * cap
+    )
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(e * cap, d),
+         jnp.zeros((1, d), dtype=out_buf.dtype)], axis=0
+    )
+    y_pairs = out_flat[slot_orig] * pairs_gate[:, None].astype(out_buf.dtype)
+    y = y_pairs.reshape(n_tok, top_k, d).sum(axis=1)
+
+    # --- shared experts (dense) ----------------------------------------------
+    if "shared" in p:
+        sh = p["shared"]
+        hs = silu(flat @ sh["w1"]) * (flat @ sh["w3"])
+        y = y + (hs @ sh["w2"]).astype(y.dtype)
+
+    # --- aux metrics (gather/segment-free) -----------------------------------
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = (jax.nn.one_hot(pairs_e, e, dtype=jnp.float32).sum(0)
+          / n_pairs)
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce),
+        "dropped_fraction": 1.0 - keep.mean(),
+    }
+    return y.astype(flat.dtype), aux
+
+
+def _cap_for(tokens: int, e: int, top_k: int, cf: float) -> int:
+    cap = int(np.ceil(tokens * top_k / e * cf))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe(
+    p: dict,
+    x: jnp.ndarray,                     # (B, T, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    norm_topk: bool = True,
+    serving: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    ctx = active_ctx()
+    b, t, d = x.shape
+    e = p["w1"].shape[0]
+
+    if ctx is None:
+        # single-device path (smoke tests, local runs)
+        cap = _cap_for(t, e, top_k, capacity_factor)
+        y, aux = jax.vmap(
+            functools.partial(_row_moe, p=p, top_k=top_k, cap=cap,
+                              norm_topk=norm_topk)
+        )(x)
+        aux = jax.tree.map(lambda a: a.mean(), aux)
+        return y, aux
+
+    # ---- explicit SPMD path (§Perf iteration a.3) --------------------------
+    # GSPMD replicates the dispatch gathers/scatters whatever the
+    # formulation (measured 272-356s collective on qwen3 train_4k), so
+    # the MoE block is a shard_map: dispatch stays device-local on the
+    # dp token shard, expert weights are explicitly FSDP-gathered
+    # (transpose: reduce-scatter of grads), and the only activation
+    # collective is ONE psum of (tokens x d_model) over tp.
+    mesh, lmap = ctx
+    dp_axes = tuple(lmap.get("dp", ()))
+    tp_axes = tuple(lmap.get("tp", ()))
+    import math as _math
+    dp_size = _math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1
+    if b % dp_size != 0:
+        dp_axes = ()
+        dp_size = 1
+    local_tokens = (b // dp_size) * t
+    cap = _cap_for(local_tokens, e, top_k, capacity_factor)
+    # serving layouts replicate the FSDP dim (serve_param_shardings):
+    # weights arrive whole, so per-layer dp gathers would be pure waste
+    # (measured: jamba decode 3 ms -> 226 ms with gathers, §Perf c.3)
+    gather_weights = bool(dp_axes) and not serving
+
+    def local_fn(p_local, x_local):
+        # explicit FSDP all-gathers (bf16, amortized over the token block)
+        w1, w3, w2 = p_local["w1"], p_local["w3"], p_local["w2"]
+        if gather_weights:
+            w1 = jax.lax.all_gather(w1, dp_axes, axis=1, tiled=True)
+            w3 = jax.lax.all_gather(w3, dp_axes, axis=1, tiled=True)
+            w2 = jax.lax.all_gather(w2, dp_axes, axis=2, tiled=True)
+        p_full = {"router": p_local["router"], "w1": w1, "w3": w3,
+                  "w2": w2}
+        if "shared" in p_local:
+            sh = p_local["shared"]
+            s1, s3, s2 = sh["w1"], sh["w3"], sh["w2"]
+            if gather_weights:
+                s1 = jax.lax.all_gather(s1, dp_axes, axis=0, tiled=True)
+                s3 = jax.lax.all_gather(s3, dp_axes, axis=0, tiled=True)
+                s2 = jax.lax.all_gather(s2, dp_axes, axis=1, tiled=True)
+            p_full["shared"] = {"w1": s1, "w3": s3, "w2": s2}
+
+        flat = x_local.reshape(-1, x_local.shape[-1])
+        y, aux = _row_moe(flat, p_full, top_k=top_k, cap=cap,
+                          norm_topk=norm_topk)
+        if tp_axes:
+            # expert outputs are partial over the d_ff shard
+            y = jax.lax.psum(y, tp_axes)
+            aux = jax.tree.map(lambda a: jax.lax.pmean(a, tp_axes), aux)
+        if dp_axes:
+            aux = jax.tree.map(lambda a: jax.lax.pmean(a, dp_axes), aux)
+        return y.reshape(x_local.shape), aux
+
+    x_spec = P(dp_axes if len(dp_axes) > 1 else
+               (dp_axes[0] if dp_axes else None), None, None)
+    # in_specs must match what local_fn expects: weights arrive
+    # un-dp-sharded when we skip the gathers (serving / batch==1)
+    lmap_eff = {"dp": dp_axes if gather_weights else (),
+                "tp": tuple(lmap.get("tp", ()))}
+    p_specs = param_pspecs(mesh, p, lmap_eff)
+    y, aux = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(p, x)
+    return y, aux

@@ -1,0 +1,313 @@
+"""Decoder-only LM assembly over heterogeneous layer stacks.
+
+All ten assigned architectures share this skeleton.  Layers are grouped
+by the architecture's *pattern period* P (jamba: 8 = lcm(attn 1:8, MoE
+1:2); xlstm: 8 = 7 mLSTM + 1 sLSTM; dense/moe: 1) and the stack is a
+``lax.scan`` over n_layers/P groups with a Python loop over the P
+heterogeneous positions inside the (rematerialized) group body — HLO
+size stays O(P) regardless of depth, which is what keeps 96-layer
+340B-parameter configs compilable in seconds.
+
+Serving state (KV caches / SSM states / xLSTM cells) is stored with a
+leading group dimension and threaded through the same scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import embed, init_embedding, init_linear, \
+    init_norm, linear, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg, kind: str, has_moe: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": init_norm(cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        )
+    elif kind == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(
+            ks[0], cfg.d_model, d_state=cfg.d_state, d_conv=cfg.d_conv,
+            expand=cfg.ssm_expand,
+        )
+    elif kind == "mlstm":
+        p["cell"] = xlstm_mod.init_mlstm(
+            ks[0], cfg.d_model, n_heads=cfg.n_heads,
+            expand=cfg.xlstm_expand,
+        )
+        return p                       # xLSTM blocks carry no separate FFN
+    elif kind == "slstm":
+        p["cell"] = xlstm_mod.init_slstm(
+            ks[0], cfg.d_model, n_heads=cfg.n_heads
+        )
+        return p
+    else:
+        raise ValueError(kind)
+
+    p["ln2"] = init_norm(cfg.d_model)
+    if has_moe:
+        p["moe"] = moe_mod.init_moe(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k,
+            n_shared_experts=cfg.n_shared_experts,
+        )
+    else:
+        p["mlp"] = ffn_mod.init_ffn(
+            ks[1], cfg.d_model, cfg.d_ff, activation=cfg.activation
+        )
+    return p
+
+
+def init_decoder(key, cfg) -> dict:
+    period, groups = cfg.pattern()
+    ks = jax.random.split(key, 3)
+    params: dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": init_norm(cfg.d_model),
+        "lm_head": init_linear(ks[1], cfg.d_model, cfg.padded_vocab),
+    }
+    layer_keys = jax.random.split(ks[2], groups * period).reshape(
+        groups, period, 2
+    )
+    stacked = []
+    for pos in range(period):
+        kind = cfg.layer_kind(pos)
+        has_moe = cfg.layer_has_moe(pos)
+        per_group = [
+            _init_layer(layer_keys[g, pos], cfg, kind, has_moe)
+            for g in range(groups)
+        ]
+        stacked.append(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+        )
+    params["layers"] = stacked
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _residual_shard(x, cfg):
+    if cfg.seq_sharded_residual:
+        return shard(x, "dp", "tp", None)
+    # recurrent mixers: batch-sharded residual, d_model replicated —
+    # activation-d x weight-d axis mismatches otherwise force full-size
+    # activation all-reduces (measured: 14.7s -> see EXPERIMENTS.md §Perf)
+    return shard(x, "dp", None, None)
+
+
+def _apply_layer(
+    p: dict,
+    x: jnp.ndarray,
+    cfg,
+    kind: str,
+    has_moe: bool,
+    *,
+    cache: Any = None,
+    cache_pos=None,
+    aux_acc=None,
+):
+    """One residual block. Returns (x, new_cache, aux_acc)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_cache = cache
+    if kind == "attn":
+        sw = cfg.sliding_window
+        if cache is not None:
+            out, new_cache = attn_mod.attention_forward(
+                p["attn"], h,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                sliding_window=sw, cache=cache, cache_pos=cache_pos,
+                kv_chunk=cfg.kv_chunk,
+            )
+        else:
+            out, _ = attn_mod.attention_forward(
+                p["attn"], h,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                sliding_window=sw, kv_chunk=cfg.kv_chunk,
+            )
+    elif kind == "mamba":
+        if cache is not None:
+            out, new_cache = mamba_mod.mamba(
+                p["mamba"], h, conv_state=cache[0], ssm_state=cache[1],
+                return_state=True,
+            )
+        else:
+            out = mamba_mod.mamba(p["mamba"], h)
+    elif kind == "mlstm":
+        if cache is not None:
+            out, new_cache = xlstm_mod.mlstm_block(
+                p["cell"], h, n_heads=cfg.n_heads, state=cache,
+                return_state=True,
+            )
+        else:
+            out = xlstm_mod.mlstm_block(p["cell"], h, n_heads=cfg.n_heads)
+        return _residual_shard(x + out, cfg), new_cache, aux_acc
+    elif kind == "slstm":
+        if cache is not None:
+            out, new_cache = xlstm_mod.slstm_block(
+                p["cell"], h, n_heads=cfg.n_heads, state=cache,
+                return_state=True,
+            )
+        else:
+            out = xlstm_mod.slstm_block(p["cell"], h, n_heads=cfg.n_heads)
+        return _residual_shard(x + out, cfg), new_cache, aux_acc
+    else:
+        raise ValueError(kind)
+
+    x = x + out
+    x = _residual_shard(x, cfg)
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if has_moe:
+        mlp_out, aux = moe_mod.moe(
+            p["moe"], h2, top_k=cfg.top_k, serving=cache is not None
+        )
+        if aux_acc is not None:
+            aux_acc = jax.tree.map(
+                lambda a, b: a + b, aux_acc,
+                {"load_balance_loss": aux["load_balance_loss"],
+                 "dropped_fraction": aux["dropped_fraction"]},
+            )
+    else:
+        mlp_out = ffn_mod.ffn(p["mlp"], h2, activation=cfg.activation)
+    x = x + mlp_out
+    x = _residual_shard(x, cfg)
+    return x, new_cache, aux_acc
+
+
+def _zero_aux():
+    return {"load_balance_loss": jnp.float32(0.0),
+            "dropped_fraction": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params, cfg, x: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """Training/scoring forward through the stack. x: (B, S, d)."""
+    period, groups = cfg.pattern()
+    x = _residual_shard(x, cfg)
+
+    def group_body(carry, group_params):
+        h, aux = carry
+        for pos in range(period):
+            h, _, aux = _apply_layer(
+                group_params[pos], h, cfg,
+                cfg.layer_kind(pos), cfg.layer_has_moe(pos), aux_acc=aux,
+            )
+        return (h, aux), None
+
+    body = jax.checkpoint(
+        group_body, policy=jax.checkpoint_policies.nothing_saveable
+    ) if cfg.remat else group_body
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, _zero_aux()), tuple(params["layers"])
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_from_hidden(params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    logits = linear(params["lm_head"], x).astype(jnp.float32)
+    logits = shard(logits, "dp", None, "tp")
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits
+
+
+def embed_tokens(params, cfg, tokens: jnp.ndarray) -> jnp.ndarray:
+    return embed(params["embed"], tokens)
+
+
+def forward_with_cache(
+    params, cfg, x: jnp.ndarray, caches: list, cache_pos
+) -> tuple[jnp.ndarray, list]:
+    """Prefill (T>1) or decode (T==1) against per-layer caches."""
+    period, groups = cfg.pattern()
+
+    def group_body(h, xs):
+        group_params, group_caches = xs
+        new_caches = []
+        for pos in range(period):
+            h, nc, _ = _apply_layer(
+                group_params[pos], h, cfg,
+                cfg.layer_kind(pos), cfg.layer_has_moe(pos),
+                cache=group_caches[pos], cache_pos=cache_pos,
+            )
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        group_body, x, (tuple(params["layers"]), tuple(caches))
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, list(new_caches)
+
+
+def init_caches(cfg, b: int, max_seq: int, dtype=jnp.bfloat16) -> list:
+    """Per-pattern-position serving state, leading dim = n_groups."""
+    period, groups = cfg.pattern()
+
+    def one(pos):
+        kind = cfg.layer_kind(pos)
+        if kind == "attn":
+            return attn_mod.KVCache(
+                k=jnp.zeros(
+                    (groups, b, max_seq, cfg.n_kv_heads, cfg.head_dim_),
+                    dtype,
+                ),
+                v=jnp.zeros(
+                    (groups, b, max_seq, cfg.n_kv_heads, cfg.head_dim_),
+                    dtype,
+                ),
+            )
+        if kind == "mamba":
+            conv, ssm = mamba_mod.init_mamba_state(
+                b, cfg.d_model, d_state=cfg.d_state, d_conv=cfg.d_conv,
+                expand=cfg.ssm_expand,
+            )
+            return (
+                jnp.broadcast_to(conv, (groups, *conv.shape)),
+                jnp.broadcast_to(ssm, (groups, *ssm.shape)),
+            )
+        if kind == "mlstm":
+            st = xlstm_mod.init_mlstm_state(
+                b, cfg.d_model, n_heads=cfg.n_heads, expand=cfg.xlstm_expand
+            )
+            return tuple(
+                jnp.broadcast_to(s, (groups, *s.shape)) for s in st
+            )
+        if kind == "slstm":
+            st = xlstm_mod.init_slstm_state(b, cfg.d_model,
+                                            n_heads=cfg.n_heads)
+            return tuple(
+                jnp.broadcast_to(s, (groups, *s.shape)) for s in st
+            )
+        raise ValueError(kind)
+
+    return [one(pos) for pos in range(period)]

@@ -1,0 +1,326 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM.
+
+mLSTM (matrix memory, exponential gating) is computed in the chunkwise-
+parallel form: within a chunk of L steps the contribution is an
+attention-like lower-triangular product with log-space decay weights;
+across chunks a ``lax.scan`` carries the (C, n, m) state.  This is the
+TPU-native formulation (MXU-friendly L x L and L x d matmuls) of the
+paper's recurrence — a sequential reference (``mlstm_sequential``) is
+kept for correctness tests.
+
+sLSTM (scalar memory, block-diagonal recurrence) is inherently
+sequential (true recurrence through h_{t-1}); it runs as a ``lax.scan``
+over time with all input projections hoisted out of the loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from repro.models.layers import init_linear, linear, silu
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, *, n_heads: int, expand: float = 2.0,
+               dtype=jnp.bfloat16) -> dict:
+    d_inner = int(expand * d_model)
+    hd = d_inner // n_heads
+    ks = jax.random.split(key, 8)
+
+    def block_diag(k):
+        # per-head block-diagonal projection (official xLSTM mLSTM layout)
+        w = jax.random.normal(k, (n_heads, hd, hd), jnp.float32)
+        return (w / np.sqrt(hd)).astype(dtype)
+
+    return {
+        "up": init_linear(ks[0], d_model, d_inner, dtype=dtype),
+        "gate_proj": init_linear(ks[1], d_model, d_inner, dtype=dtype),
+        "wq": block_diag(ks[2]),
+        "wk": block_diag(ks[3]),
+        "wv": block_diag(ks[4]),
+        "w_if": init_linear(ks[5], d_inner, 2 * n_heads, dtype=dtype),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "down": init_linear(ks[7], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _headwise_rmsnorm(x, scale, n_heads, eps=1e-5):
+    """GroupNorm-per-head stand-in (B, T, H, hd)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def mlstm_chunkwise(
+    q, k, v,            # (B, H, T, dk/dv)
+    i_gate, f_gate,     # (B, H, T) pre-activation (log-space via softplus)
+    *,
+    chunk: int = 64,
+    state=None,         # (C (B,H,dk,dv), n (B,H,dk), m (B,H))
+):
+    """Chunkwise-parallel stabilized mLSTM. Returns (h, state)."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        z = lambda x_, d_: jnp.pad(x_, ((0, 0), (0, 0), (0, pad)) + d_)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, 0), (0, pad)),
+                         constant_values=-1e30)
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, 0), (0, pad)))
+    tt = t + pad
+    nc = tt // chunk
+    scale = dk ** -0.5
+
+    def rs(x_, d_):
+        return x_.reshape(b, h, nc, chunk, d_).transpose(2, 0, 1, 3, 4)
+
+    qc, kc, vc = rs(q, dk), rs(k, dk), rs(v, dv)
+    ic = i_gate.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    # log f via softplus (always-positive forget gate in (0,1) log-space)
+    logf = jax.nn.log_sigmoid(
+        f_gate.astype(jnp.float32)
+    ).reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def body(carry, xs):
+        c, n, m = carry
+        qj, kj, vj, ij, fj = xs
+        qj32, kj32, vj32 = (
+            qj.astype(jnp.float32), kj.astype(jnp.float32),
+            vj.astype(jnp.float32),
+        )
+        ij = ij.astype(jnp.float32)
+        cum_f = jnp.cumsum(fj, axis=-1)                       # (B,H,L)
+        # log weight of source s at step t: cum_f_t - cum_f_s + i_s
+        src = ij - cum_f                                      # (B,H,L)
+        run_max = jax.lax.cummax(src, axis=src.ndim - 1)      # (B,H,L)
+        m_new = jnp.maximum(cum_f + m[..., None], cum_f + run_max)
+        inter_scale = jnp.exp(cum_f + m[..., None] - m_new)   # (B,H,L)
+        logw = (
+            cum_f[..., :, None] + src[..., None, :] - m_new[..., :, None]
+        )                                                     # (B,H,L,L)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(tri[None, None], jnp.exp(logw), 0.0)
+
+        scores = jnp.einsum("bhtd,bhsd->bhts", qj32, kj32) * scale
+        intra = jnp.einsum("bhts,bhsv->bhtv", scores * w, vj32)
+        inter = jnp.einsum(
+            "bhtd,bhdv->bhtv", qj32, c
+        ) * scale * inter_scale[..., None]
+        num = intra + inter
+
+        n_intra = jnp.einsum("bhts,bhsd->bhtd", w, kj32)
+        n_t = n_intra + n[..., None, :] * inter_scale[..., None]
+        denom = jnp.abs(
+            jnp.einsum("bhtd,bhtd->bht", qj32, n_t) * scale
+        )
+        denom = jnp.maximum(denom, jnp.exp(-m_new))
+        h_out = num / denom[..., None]
+
+        # end-of-chunk state update
+        last_scale = jnp.exp(cum_f[..., -1:] + m[..., None] - m_new[..., -1:])
+        src_w = jnp.exp(
+            cum_f[..., -1:] + src - m_new[..., -1:]
+        )                                                     # (B,H,L)
+        c_new = (
+            c * last_scale[..., None]
+            + jnp.einsum("bhs,bhsd,bhsv->bhdv", src_w, kj32, vj32)
+        )
+        n_new = n * last_scale + jnp.einsum("bhs,bhsd->bhd", src_w, kj32)
+        m_out = m_new[..., -1]
+        return (c_new, n_new, m_out), h_out
+
+    (c, n, m), hs = jax.lax.scan(body, (c0, n0, m0), (qc, kc, vc, ic, logf))
+    h_all = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, tt, dv)[:, :, :t]
+    return h_all, (c, n, m)
+
+
+def mlstm_sequential(q, k, v, i_gate, f_gate, *, state=None):
+    """Step-by-step reference recurrence (tests + single-token decode)."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    scale = dk ** -0.5
+    if state is None:
+        c = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n = jnp.zeros((b, h, dk), jnp.float32)
+        m = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c, n, m = state
+
+    def body(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, it, ft = xs
+        qt, kt, vt = (x.astype(jnp.float32) for x in (qt, kt, vt))
+        logf = jax.nn.log_sigmoid(ft.astype(jnp.float32))
+        m_new = jnp.maximum(logf + m, it.astype(jnp.float32))
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(it.astype(jnp.float32) - m_new)
+        c = c * fp[..., None, None] + ip[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = n * fp[..., None] + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhdv->bhv", qt, c) * scale
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)) * scale,
+            jnp.exp(-m_new),
+        )
+        return (c, n, m_new), num / den[..., None]
+
+    xs = tuple(
+        x.transpose(2, 0, 1, 3) for x in (q, k, v)
+    ) + tuple(x.transpose(2, 0, 1) for x in (i_gate, f_gate))
+    (c, n, m), hs = jax.lax.scan(body, (c, n, m), xs)
+    return hs.transpose(1, 2, 0, 3), (c, n, m)
+
+
+def mlstm_block(
+    p: dict,
+    x: jnp.ndarray,                 # (B, T, d_model)
+    *,
+    n_heads: int,
+    chunk: int = 64,
+    state=None,
+    return_state: bool = False,
+):
+    b, t, _ = x.shape
+    inner = linear(p["up"], x)
+    gate = linear(p["gate_proj"], x)
+    d_inner = inner.shape[-1]
+    hd = d_inner // n_heads
+
+    inner_h = inner.reshape(b, t, n_heads, hd)
+
+    def heads(w):
+        # block-diagonal per-head projection -> (B, H, T, hd)
+        return jnp.einsum("bthd,hde->bhte", inner_h, w)
+
+    q = heads(p["wq"])
+    k = heads(p["wk"])
+    v = shard(heads(p["wv"]), "dp", None, None, "tp")
+    if_gates = linear(p["w_if"], inner).astype(jnp.float32)
+    i_gate = if_gates[..., :n_heads].transpose(0, 2, 1)
+    f_gate = if_gates[..., n_heads:].transpose(0, 2, 1)
+
+    if t == 1 and state is not None:
+        h, new_state = mlstm_sequential(q, k, v, i_gate, f_gate, state=state)
+    else:
+        h, new_state = mlstm_chunkwise(
+            q, k, v, i_gate, f_gate, chunk=min(chunk, max(t, 1)),
+            state=state,
+        )
+    h = shard(h, "dp", None, None, "tp")
+    h = h.transpose(0, 2, 1, 3)                    # (B, T, H, hd)
+    h = _headwise_rmsnorm(h, p["norm_scale"], n_heads)
+    h = h.reshape(b, t, d_inner) * p["norm_scale"][None, None]
+    h = shard(h, "dp", None, "tp")
+    out = linear(p["down"], (h.astype(x.dtype) * silu(gate)))
+    if return_state:
+        return out, new_state
+    return out
+
+
+def init_mlstm_state(b, d_model, *, n_heads, expand=2.0):
+    d_inner = int(expand * d_model)
+    hd = d_inner // n_heads
+    return (
+        jnp.zeros((b, n_heads, hd, hd), jnp.float32),
+        jnp.zeros((b, n_heads, hd), jnp.float32),
+        jnp.full((b, n_heads), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, *, n_heads: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": init_linear(ks[0], d_model, 4 * d_model, dtype=dtype),
+        "r_kernel": (
+            jax.random.normal(ks[1], (4, n_heads, hd, hd), jnp.float32)
+            / np.sqrt(hd)
+        ).astype(dtype),
+        "norm_scale": jnp.ones((d_model,), jnp.float32),
+        "w_ff": {
+            "w1": init_linear(ks[2], d_model, 2 * d_model, dtype=dtype),
+            "w2": init_linear(ks[3], d_model, d_model, dtype=dtype),
+        },
+    }
+
+
+def slstm_block(
+    p: dict,
+    x: jnp.ndarray,                # (B, T, d_model)
+    *,
+    n_heads: int,
+    state=None,                    # (c, n, m, h) each (B, H, hd)
+    return_state: bool = False,
+):
+    b, t, d = x.shape
+    hd = d // n_heads
+    wx = linear(p["w_in"], x).astype(jnp.float32)     # (B,T,4d)
+    wx = wx.reshape(b, t, 4, n_heads, hd)
+    wx = shard(wx, "dp", None, None, None, "tp")
+    r = p["r_kernel"].astype(jnp.float32)             # (4,H,hd,hd)
+
+    if state is None:
+        zeros = jnp.zeros((b, n_heads, hd), jnp.float32)
+        state = (zeros, zeros + 1e-6, zeros - 1e30, zeros)
+    c0, n0, m0, h0 = state
+
+    def body(carry, xt):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhd,ghde->gbhe", h, r)       # (4,B,H,hd)
+        zt = jnp.tanh(xt[:, 0] + rec[0])
+        it = xt[:, 1] + rec[1]
+        ft = xt[:, 2] + rec[2]
+        ot = jax.nn.sigmoid(xt[:, 3] + rec[3])
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(it - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    (c0, n0, m0, h0), hs = jax.lax.scan(
+        body, (c0, n0, m0, h0), wx.transpose(1, 0, 2, 3, 4)
+    )
+    h_all = hs.transpose(1, 0, 2, 3).reshape(b, t, d)
+    h_all = h_all * p["norm_scale"][None, None]
+    out = h_all.astype(x.dtype)
+    # post-up-projection GeGLU FFN (xLSTM sLSTM block, pf = 4/3-style)
+    ff = p["w_ff"]
+    g = linear(ff["w1"], out)
+    g1, g2 = jnp.split(g, 2, axis=-1)
+    out = linear(ff["w2"], silu(g1) * g2)
+    if return_state:
+        return out, (c0, n0, m0, h0)
+    return out
+
+
+def init_slstm_state(b, d_model, *, n_heads):
+    hd = d_model // n_heads
+    zeros = jnp.zeros((b, n_heads, hd), jnp.float32)
+    return (zeros, zeros + 1e-6, zeros - 1e30, zeros)

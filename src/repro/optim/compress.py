@@ -1,0 +1,109 @@
+"""2-bit Sign-Magnitude gradient compression with error feedback.
+
+Beyond-paper integration: QuIVer's training-free 2-bit encoder (§3.1)
+applied to *gradients* on the data-parallel axis.  Exactly the paper's
+code construction — per-tensor threshold tau = mean|g|, sign plane +
+magnitude plane — plus two per-tensor reconstruction levels (the
+conditional means of the weak/strong buckets, i.e. the 1-D Lloyd-Max
+update for the paper's 4-level quantizer), and EF-SGD-style error
+feedback so quantization noise is fed back instead of lost.
+
+16x compression vs fp32 on the wire (2 bits + 2 scalars per tensor).
+``compressed_psum`` demonstrates the collective itself under
+``shard_map`` (quantize -> all-gather words -> decode+sum), used on the
+'pod' (DCN) axis where bandwidth is scarcest.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bq
+
+
+def sm2_quantize(x: jnp.ndarray):
+    """Flat fp32 -> (packed words (2W,) uint32, c_weak, c_strong)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    absx = jnp.abs(flat)
+    tau = absx.mean()
+    pos = flat > 0
+    strong = absx > tau
+    words = jnp.concatenate(
+        [bq.pack_bits(pos), bq.pack_bits(strong)], axis=-1
+    )
+    # Lloyd-Max level update: conditional mean |x| per bucket
+    n_strong = jnp.maximum(strong.sum(), 1)
+    n_weak = jnp.maximum((~strong).sum(), 1)
+    c_strong = jnp.where(strong, absx, 0.0).sum() / n_strong
+    c_weak = jnp.where(strong, 0.0, absx).sum() / n_weak
+    return words, c_weak, c_strong
+
+
+def sm2_dequantize(words, c_weak, c_strong, size: int, shape) -> jnp.ndarray:
+    w = words.shape[-1] // 2
+    pos = bq.unpack_bits(words[..., :w], size)
+    strong = bq.unpack_bits(words[..., w:], size)
+    mag = jnp.where(strong, c_strong, c_weak)
+    out = jnp.where(pos, mag, -mag)
+    return out.reshape(shape)
+
+
+def compress_decompress_tree(grads: Any, ef: Any) -> tuple[Any, Any]:
+    """Quantize+dequantize each leaf with error feedback.
+
+    Models the numerical effect of the compressed all-reduce exactly
+    (the collective itself is ``compressed_psum``); returns
+    (decoded grads, new error-feedback state).
+    """
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        size = g32.size
+        words, cw, cs = sm2_quantize(g32)
+        dec = sm2_dequantize(words, cw, cs, size, g32.shape)
+        return dec.astype(g.dtype), (g32 - dec).astype(e.dtype)
+
+    out = jax.tree.map(leaf, grads, ef)
+    dec = jax.tree.map(lambda o: o[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return dec, new_ef
+
+
+def init_error_feedback(params: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype=dtype), params
+    )
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """2-bit compressed all-reduce (inside shard_map).
+
+    Wire bytes: 2 bits/element instead of 32 — each member quantizes
+    its local shard, all-gathers the packed words + two scalars, then
+    decodes and sums all contributions locally.
+    """
+    shape = x.shape
+    size = x.size
+    words, cw, cs = sm2_quantize(x)
+    aw = jax.lax.all_gather(words, axis_name)        # (N, 2W) uint32
+    acw = jax.lax.all_gather(cw, axis_name)
+    acs = jax.lax.all_gather(cs, axis_name)
+    n = aw.shape[0]
+    decoded = jax.vmap(
+        lambda w, a, b: sm2_dequantize(w, a, b, size, shape)
+    )(aw, acw, acs)
+    return decoded.sum(axis=0)
+
+
+def compression_ratio(params: Any) -> float:
+    """Wire-byte ratio fp32 : compressed for one gradient exchange."""
+    total = sum(p.size for p in jax.tree.leaves(params))
+    n_leaves = len(jax.tree.leaves(params))
+    fp32 = 4 * total
+    comp = total / 4 + 8 * n_leaves      # 2 bits/elem + 2 fp32 scalars
+    return fp32 / comp

@@ -1,0 +1,41 @@
+"""LR schedules: linear-warmup cosine and MiniCPM's WSD (warmup-stable-decay).
+
+WSD [arXiv:2404.06395 §4]: warmup to peak, hold constant for the stable
+phase, then a short exponential/linear decay tail — the schedule that
+lets MiniCPM resume the stable phase from any checkpoint (continuous
+pretraining), which pairs naturally with this framework's elastic
+checkpoint/restore.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * progress)
+    )
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    decay_progress = jnp.clip(
+        (step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0
+    )
+    # exponential-style decay tail
+    decayed = peak_lr * jnp.power(final_frac, decay_progress)
+    out = jnp.where(step < warmup, warm, peak_lr)
+    return jnp.where(step > warmup + stable, decayed, out)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd}

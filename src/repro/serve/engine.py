@@ -1,0 +1,106 @@
+"""Batched serving engine: prefill/decode loop + QuIVer retrieval (RAG).
+
+The engine drives any decoder-family ``ModelBundle``:
+
+    engine = ServeEngine(bundle, params, max_seq=...)
+    out = engine.generate(prompts)                   # batched greedy
+    out = engine.generate(prompts, retriever=quiver) # retrieval-augmented
+
+Retrieval integration (DESIGN.md §4): the prompt's mean-pooled embedding
+queries a QuIVer index; the top-k neighbour *token prefixes* are
+prepended to the prompt before prefill — the hot path of retrieval is
+the paper's XOR/popcount beam search, so augmentation adds microseconds
+of index time, not model FLOPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Retriever:
+    """QuIVer index + token store for RAG."""
+    index: Any                      # QuIVerIndex
+    doc_tokens: np.ndarray          # (n_docs, doc_len) int32
+    embed_fn: Callable              # (B, S) tokens -> (B, D) embeddings
+    k: int = 2
+    ef: int = 64
+
+    def augment(self, tokens: np.ndarray) -> np.ndarray:
+        emb = np.asarray(self.embed_fn(jnp.asarray(tokens)))
+        ids, _ = self.index.search(jnp.asarray(emb), k=self.k, ef=self.ef)
+        ctx = self.doc_tokens[ids.reshape(len(tokens), -1)]
+        ctx = ctx.reshape(len(tokens), -1)
+        return np.concatenate([ctx, tokens], axis=1)
+
+
+class ServeEngine:
+    def __init__(self, bundle, params, *, max_seq: int = 512):
+        self.bundle = bundle
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(bundle.prefill)
+        self._decode = jax.jit(bundle.decode, donate_argnums=(2,))
+
+    def generate(
+        self,
+        tokens: np.ndarray,              # (B, S) int32 prompts
+        *,
+        max_new: int = 32,
+        retriever: Retriever | None = None,
+        temperature: float = 0.0,
+        seed: int = 0,
+        extra_batch: dict | None = None,
+    ) -> np.ndarray:
+        if retriever is not None:
+            tokens = retriever.augment(tokens)
+        tokens = np.asarray(tokens, dtype=np.int32)
+        b, s = tokens.shape
+        assert s + max_new <= self.max_seq
+
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extra_batch:
+            batch.update(extra_batch)
+        caches = self.bundle.init_caches(b, self.max_seq)
+        logits, caches = self._prefill(self.params, batch, caches)
+
+        prompt_len = s
+        cfg = self.bundle.cfg
+        if cfg.frontend == "patch_stub" and extra_batch:
+            prompt_len += extra_batch["patches"].shape[1]
+
+        key = jax.random.PRNGKey(seed)
+        out = []
+        pos = prompt_len
+        for i in range(max_new):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / temperature)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            tok = tok.astype(jnp.int32)[:, None]
+            out.append(np.asarray(tok))
+            logits, caches = self._decode(
+                self.params, tok, caches, jnp.int32(pos)
+            )
+            pos += 1
+        return np.concatenate(out, axis=1)
+
+
+def mean_pool_embedder(bundle, params):
+    """(B, S) tokens -> (B, d_model) embeddings from the final hidden
+    state (the LM as its own embedding model for RAG)."""
+    from repro.models import transformer as tf
+
+    def embed(tokens):
+        x = tf.embed_tokens(params, bundle.cfg, tokens)
+        h, _ = tf.forward_hidden(params, bundle.cfg, x)
+        return h.mean(axis=1).astype(jnp.float32)
+
+    return jax.jit(embed)

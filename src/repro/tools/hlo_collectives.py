@@ -1,0 +1,141 @@
+"""Collective-byte accounting from optimized HLO with loop correction.
+
+GSPMD inserts collectives during compilation, so they are only visible
+in ``compiled.as_text()`` — but collectives inside while-loop bodies
+(our scan-over-layers / microbatch loops) execute trip-count-many times
+while appearing once in the text.  XLA annotates most loops with
+``backend_config={"known_trip_count":{"n":...}}``; this parser builds
+the computation call graph (while bodies/conditions, fusions, calls),
+propagates multipliers from ENTRY, and sums result-shape bytes of every
+collective op weighted by its computation's multiplier.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        sz = _DTYPE_BYTES.get(dtype)
+        if sz is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * sz
+    return total
+
+
+def parse_collectives(hlo_text: str,
+                      default_while_trips: int = 1) -> dict[str, Any]:
+    """Loop-corrected per-device collective bytes by kind."""
+    # 1. split into computations and find ENTRY
+    comp_lines: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for raw in hlo_text.splitlines():
+        stripped = raw.strip()
+        # computation headers: "[ENTRY ]%name (args...) -> result {"
+        # (args may contain nested parens, so match by structure not regex)
+        if stripped.endswith("{") and "->" in stripped and (
+            stripped.startswith("%") or stripped.startswith("ENTRY")
+        ):
+            toks = stripped.split()
+            name_tok = toks[1] if toks[0] == "ENTRY" else toks[0]
+            current = name_tok.lstrip("%")
+            comp_lines[current] = []
+            if stripped.startswith("ENTRY"):
+                entry = current
+            continue
+        if current is not None:
+            comp_lines[current].append(stripped)
+
+    # 2. edges: computation -> [(callee, multiplier_factor)]
+    edges: dict[str, list[tuple[str, int]]] = {c: [] for c in comp_lines}
+    for comp, lines in comp_lines.items():
+        for ln in lines:
+            if " while(" in ln:
+                trip = _TRIP_RE.search(ln)
+                n = int(trip.group(1)) if trip else default_while_trips
+                b = _BODY_RE.search(ln)
+                c = _COND_RE.search(ln)
+                if b:
+                    edges[comp].append((b.group(1), n))
+                if c:
+                    edges[comp].append((c.group(1), n + 1))
+            else:
+                cm = _CALLS_RE.search(ln)
+                if cm:
+                    edges[comp].append((cm.group(1), 1))
+
+    # 3. propagate multipliers from ENTRY (call graph is a DAG)
+    mult: dict[str, float] = {c: 0.0 for c in comp_lines}
+    if entry is None and comp_lines:
+        entry = next(iter(comp_lines))
+    if entry is not None:
+        mult[entry] = 1.0
+        # simple fixpoint (DAG depth is small)
+        for _ in range(64):
+            changed = False
+            for comp, outs in edges.items():
+                for callee, factor in outs:
+                    if callee not in mult:
+                        continue
+                    cand = mult[comp] * factor
+                    if cand > mult[callee]:
+                        mult[callee] = cand
+                        changed = True
+            if not changed:
+                break
+
+    # 4. sum collective result bytes x multiplier
+    # (computations the propagation failed to reach count with mult 1:
+    # undercounting silently would hide collective cost)
+    bytes_by_kind = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    unreached = 0
+    for comp, lines in comp_lines.items():
+        m = mult.get(comp, 1.0)
+        if m == 0.0:
+            m = 1.0
+            unreached += 1
+        for ln in lines:
+            for kind in COLLECTIVES:
+                if f" {kind}(" in ln or f" {kind}-start(" in ln:
+                    eq = ln.find("=")
+                    at = ln.find(f" {kind}")
+                    if eq < 0 or at < eq:
+                        continue
+                    b = _shape_bytes(ln[eq + 1: at])
+                    bytes_by_kind[kind] += b * m
+                    counts[kind] += 1
+                    break
+
+    return {
+        "bytes_by_kind": bytes_by_kind,
+        "counts_by_kind": counts,
+        "total_bytes": sum(bytes_by_kind.values()),
+        "total_count": sum(counts.values()),
+        "unreached_computations": unreached,
+    }

@@ -1,0 +1,132 @@
+"""Training step: microbatch gradient accumulation + AdamW + schedules.
+
+The global batch is split into ``n_micro`` microbatches accumulated in a
+``lax.scan`` with fp32 gradient accumulators — per-device activation
+memory is bounded by one microbatch regardless of global batch size
+(this is what fits nemotron-340b's 1M-token steps on 16 GB chips).
+Gradient compression (2-bit Sign-Magnitude with error feedback — the
+paper's encoder reused on the DP axis) hooks in between accumulation and
+the optimizer; see ``repro/optim/compress.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import SCHEDULES
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_micro: int = 1
+    peak_lr: float = 3e-4
+    warmup: int = 200
+    total_steps: int = 10_000
+    schedule: str = "cosine"
+    adamw: AdamWConfig = AdamWConfig()
+    compress_grads: bool = False
+
+
+def suggest_n_micro(cfg: ArchConfig, shape: ShapeConfig, dp: int) -> int:
+    """Fewest microbatches whose activations fit (FSDP weight-gather
+    traffic scales linearly with n_micro: 190.8s -> 129.3s collective on
+    nemotron train_4k going 16 -> 4, EXPERIMENTS.md §Perf b.2).
+
+    Napkin model: saved group-boundary residuals per device
+      = n_layers * (B/dp/n_micro) * S/tp_or_1 * d_model * 2 B
+    budget ~4 GB next to params+optimizer (~11 GB at 340B/bf16-Adam).
+    """
+    per_dev = max(1, shape.global_batch // dp)
+    seq_shard = 16 if cfg.seq_sharded_residual else 1
+    budget = 4e9
+    for n_micro in (1, 2, 4, 8, 16, 32):
+        if n_micro > per_dev:
+            break
+        act = (cfg.n_layers * (per_dev / n_micro)
+               * shape.seq_len / seq_shard * cfg.d_model * 2)
+        if act <= budget:
+            return n_micro
+    return per_dev
+
+
+def _lr(tc: TrainConfig, step):
+    sched = SCHEDULES[tc.schedule]
+    if tc.schedule == "wsd":
+        return sched(step, peak_lr=tc.peak_lr, warmup=tc.warmup,
+                     stable=int(0.8 * tc.total_steps),
+                     decay=int(0.1 * tc.total_steps))
+    return sched(step, peak_lr=tc.peak_lr, warmup=tc.warmup,
+                 total=tc.total_steps)
+
+
+def make_train_step(bundle, tc: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch`` leaves have leading dim = global_batch."""
+
+    grad_fn = jax.value_and_grad(bundle.loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        step = opt_state["count"]
+
+        if tc.n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(
+                    tc.n_micro, x.shape[0] // tc.n_micro, *x.shape[1:]
+                ),
+                batch,
+            )
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads
+                )
+                return (acc, loss_acc + loss), metrics
+
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zero, jnp.float32(0.0)), micro
+            )
+            grads = jax.tree.map(lambda g: g / tc.n_micro, grads)
+            loss = loss_sum / tc.n_micro
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        if tc.compress_grads:
+            from repro.optim.compress import compress_decompress_tree
+            grads, new_ef = compress_decompress_tree(
+                grads, opt_state["ef"]
+            )
+            opt_state = {**opt_state, "ef": new_ef}
+
+        lr = _lr(tc, step)
+        params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, tc.adamw, lr
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(bundle, tc: TrainConfig, key):
+    params = bundle.init(key)
+    opt_state = init_opt_state(params, tc.adamw)
+    if tc.compress_grads:
+        from repro.optim.compress import init_error_feedback
+        opt_state["ef"] = init_error_feedback(params)
+    return params, opt_state

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bq
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_vecs(rng, n, d):
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+
+
+@pytest.mark.parametrize("dim", [64, 100, 384, 768, 1536])
+@pytest.mark.parametrize("q,n", [(1, 64), (8, 512), (13, 777)])
+def test_bq_distance_kernel_matches_ref(dim, q, n):
+    rng = np.random.default_rng(dim + q + n)
+    qs = bq.encode(_rand_vecs(rng, q, dim))
+    bs = bq.encode(_rand_vecs(rng, n, dim))
+    out = ops.bq_distance(qs.words, bs.words, dim, interpret=True)
+    expect = ref.bq_distance_ref(qs.words, bs.words, dim)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    assert out.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("dim", [32, 384, 768])
+@pytest.mark.parametrize("blocks", [(8, 128), (16, 512)])
+def test_bq_distance_kernel_block_sweep(dim, blocks):
+    bq_, bn = blocks
+    rng = np.random.default_rng(99)
+    qs = bq.encode(_rand_vecs(rng, 24, dim))
+    bs = bq.encode(_rand_vecs(rng, 1000, dim))
+    out = ops.bq_distance(
+        qs.words, bs.words, dim, block_q=bq_, block_n=bn, interpret=True
+    )
+    expect = ref.bq_distance_ref(qs.words, bs.words, dim)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("dim", [100, 768])
+def test_hamming_kernel_matches_ref(dim):
+    rng = np.random.default_rng(5)
+    qs = bq.encode(_rand_vecs(rng, 9, dim))
+    bs = bq.encode(_rand_vecs(rng, 333, dim))
+    out = ops.hamming_distance(qs.pos, bs.pos, interpret=True)
+    expect = ref.hamming_distance_ref(qs.pos, bs.pos, dim)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("dim", [64, 100, 384, 768, 1536])
+@pytest.mark.parametrize("n", [4, 256, 300])
+def test_binarize_kernel_matches_ref(dim, n):
+    rng = np.random.default_rng(dim * 7 + n)
+    x = _rand_vecs(rng, n, dim)
+    sig = ops.binarize(x, interpret=True)
+    expect = ref.binarize_ref(x)
+    np.testing.assert_array_equal(np.asarray(sig.words), np.asarray(expect))
+    assert sig.words.dtype == jnp.uint32
+    assert sig.dim == dim
+
+
+def test_binarize_then_distance_pipeline_consistent():
+    """Full hot path: kernel binarize -> kernel distance == pure-jnp path."""
+    rng = np.random.default_rng(11)
+    base = _rand_vecs(rng, 200, 384)
+    q = _rand_vecs(rng, 3, 384)
+    sig_b = ops.binarize(base, interpret=True)
+    sig_q = ops.binarize(q, interpret=True)
+    d_kernel = ops.bq_distance(sig_q.words, sig_b.words, 384, interpret=True)
+    d_ref = bq.pairwise_distance(bq.encode(q), bq.encode(base))
+    np.testing.assert_array_equal(np.asarray(d_kernel), np.asarray(d_ref))
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 2, 32), (1, 256, 4, 64),
+                                   (1, 100, 2, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_kernel_matches_ref(shape, causal):
+    b, t, h, hd = shape
+    rng = np.random.default_rng(sum(shape))
+    q = jnp.asarray(rng.standard_normal((b, t, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, h, hd)), jnp.float32)
+    out = ops.flash_attention_tpu(
+        q, k, v, causal=causal, block_q=64, block_kv=64, interpret=True
+    )
+    folded = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+    expect = ref.flash_attention_ref(
+        folded(q), folded(k), folded(v), causal=causal
+    ).reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_kernel_bf16():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.bfloat16)
+    out = ops.flash_attention_tpu(q, k, v, interpret=True, block_q=64,
+                                  block_kv=64)
+    assert out.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(out, dtype=np.float32)).all()

@@ -1,0 +1,224 @@
+"""Substrate tests: optimizer, schedules, compression, checkpointing,
+pipeline determinism, trainer restart + straggler detection."""
+
+import os
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.compress import (
+    compress_decompress_tree,
+    compression_ratio,
+    init_error_feedback,
+    sm2_dequantize,
+    sm2_quantize,
+)
+from repro.optim.schedule import warmup_cosine, wsd
+from repro.train.train_step import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -- optimizer ---------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    cfg = AdamWConfig(weight_decay=0.0)
+    state = init_opt_state(params, cfg)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg,
+                                        jnp.float32(0.05))
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_bf16_state_roundtrips():
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    cfg = AdamWConfig(state_dtype=jnp.bfloat16)
+    state = init_opt_state(params, cfg)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    params2, state, _ = adamw_update(params, grads, state, cfg,
+                                     jnp.float32(0.01))
+    assert jnp.isfinite(params2["w"].astype(jnp.float32)).all()
+    assert (params2["w"] != params["w"]).any()
+
+
+# -- schedules ---------------------------------------------------------------
+
+
+def test_wsd_schedule_phases():
+    lr = lambda s: float(wsd(s, peak_lr=1.0, warmup=10, stable=80, decay=10))
+    assert lr(0) == 0.0
+    assert lr(5) == pytest.approx(0.5)
+    assert lr(50) == pytest.approx(1.0)      # stable phase
+    assert lr(89) == pytest.approx(1.0)
+    assert lr(95) < 0.2                       # decay tail
+    assert lr(100) == pytest.approx(0.01, rel=0.1)
+
+
+def test_cosine_schedule_monotone_after_peak():
+    vals = [float(warmup_cosine(s, peak_lr=1.0, warmup=10, total=100))
+            for s in range(10, 100, 10)]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+
+
+# -- 2-bit SM gradient compression -------------------------------------------
+
+
+def test_sm2_quantize_roundtrip_preserves_sign_and_scale():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1000,)) * 0.1, jnp.float32)
+    words, cw, cs = sm2_quantize(x)
+    dec = sm2_dequantize(words, cw, cs, x.size, x.shape)
+    # signs always preserved
+    assert (jnp.sign(dec) == jnp.sign(x)).mean() > 0.999
+    # Lloyd-Max levels: decoded norm within 2x of true norm
+    ratio = float(jnp.linalg.norm(dec) / jnp.linalg.norm(x))
+    assert 0.5 < ratio < 2.0
+
+
+def test_error_feedback_sgd_converges():
+    """EF-compressed gradient descent still reaches the optimum."""
+    w = jnp.asarray([4.0, -2.0, 1.0, -0.5] * 16)
+    ef = jnp.zeros_like(w)
+    lr = 0.05
+    for _ in range(400):
+        g = 2 * w                           # d/dw ||w||^2
+        dec, new_ef = compress_decompress_tree({"w": g}, {"w": ef})
+        ef = new_ef["w"]
+        w = w - lr * dec["w"]
+    assert float(jnp.abs(w).max()) < 0.1
+
+
+def test_compression_ratio_near_16x():
+    params = {"a": jnp.zeros((1024, 1024)), "b": jnp.zeros((4096,))}
+    r = compression_ratio(params)
+    assert 15.0 < r <= 16.0
+
+
+# -- checkpointing -----------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"count": jnp.int32(7)}}
+    checkpoint.save(str(tmp_path / "step_5"), tree, step=5)
+    checkpoint.save(str(tmp_path / "step_9"), tree, step=9)
+    assert checkpoint.latest_step(str(tmp_path)) == 9
+    restored, step = checkpoint.restore(str(tmp_path / "step_9"), tree)
+    assert step == 9
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+
+
+def test_checkpoint_async_write_completes(tmp_path):
+    tree = {"w": jnp.ones((128, 128))}
+    t = checkpoint.save(str(tmp_path / "step_1"), tree, step=1,
+                        async_write=True)
+    t.join()
+    restored, _ = checkpoint.restore(str(tmp_path / "step_1"), tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.ones((128, 128)))
+
+
+# -- data pipeline -----------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4, seed=3)
+    p1 = TokenPipeline(cfg)
+    p2 = TokenPipeline(cfg)
+    b1 = p1.batch_at(17)
+    b2 = p2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(
+        p1.batch_at(3)["tokens"][:, 1:], p1.batch_at(3)["labels"][:, :-1]
+    )
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    hosts = [TokenPipeline(cfg, host_id=i, n_hosts=4) for i in range(4)]
+    batches = [h.batch_at(0)["tokens"] for h in hosts]
+    assert all(b.shape == (2, 16) for b in batches)
+    # different hosts see different data
+    assert not np.array_equal(batches[0], batches[1])
+
+
+# -- trainer: restart + fault tolerance ---------------------------------------
+
+
+def _tiny_setup(tmp_path, steps, ckpt_every=4, lr=1e-3):
+    cfg = get_config("minicpm-2b").smoke()
+    bundle = build_model(cfg)
+    tc = TrainConfig(n_micro=1, peak_lr=lr, total_steps=steps)
+    pipeline = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=2
+    ))
+    trainer = Trainer(
+        bundle, tc,
+        TrainerConfig(steps=steps, ckpt_dir=str(tmp_path),
+                      ckpt_every=ckpt_every, log_every=2,
+                      async_ckpt=False),
+        pipeline,
+    )
+    return trainer
+
+
+@pytest.mark.slow
+def test_trainer_checkpoint_restart_resumes(tmp_path):
+    t1 = _tiny_setup(tmp_path, steps=6, ckpt_every=3)
+    r1 = t1.run()
+    assert r1["final_step"] == 6
+    assert checkpoint.latest_step(str(tmp_path)) == 6
+
+    # a "restarted job": same config, higher step target
+    t2 = _tiny_setup(tmp_path, steps=10, ckpt_every=3)
+    r2 = t2.run()
+    assert r2["final_step"] == 10
+    # it resumed: first logged step is >= 6, not 0
+    assert r2["metrics"][0]["step"] >= 6
+
+
+@pytest.mark.slow
+def test_trainer_loss_decreases(tmp_path):
+    t = _tiny_setup(tmp_path / "none", steps=200, ckpt_every=10_000,
+                    lr=5e-3)
+    t.cfg.ckpt_dir = None
+    r = t.run()
+    first = np.mean([m["loss"] for m in r["metrics"][:3]])
+    last = np.mean([m["loss"] for m in r["metrics"][-3:]])
+    assert last < first - 0.2, (first, last)
+
+
+def test_straggler_detection_flags_slow_steps():
+    events = []
+
+    class FakeTrainer(Trainer):
+        def __init__(self):  # bypass jit setup
+            self.cfg = TrainerConfig(straggler_factor=3.0)
+            self.straggler_events = events
+
+    # simulate the EWMA logic inline (unit test of the detector math)
+    ewma = None
+    times = [0.1] * 10 + [1.0] + [0.1] * 5
+    flagged = []
+    for i, dt in enumerate(times):
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        if i > 3 and dt > 3.0 * ewma:
+            flagged.append(i)
+    assert flagged == [10]
