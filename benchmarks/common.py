@@ -60,13 +60,13 @@ def ground_truth(name: str, k: int = 10):
 
 
 def timed_search(idx, queries, *, ef: int, k: int = 10, nav="bq2",
-                 repeats: int = 2):
+                 expand: int = 1, repeats: int = 2):
     """Returns (pred_ids, seconds_per_query)."""
     q = jnp.asarray(queries)
-    pred, _ = idx.search(q, k=k, ef=ef, nav=nav)          # warm/compile
+    pred, _ = idx.search(q, k=k, ef=ef, nav=nav, expand=expand)  # warm
     t0 = time.perf_counter()
     for _ in range(repeats):
-        pred, _ = idx.search(q, k=k, ef=ef, nav=nav)
+        pred, _ = idx.search(q, k=k, ef=ef, nav=nav, expand=expand)
     dt = (time.perf_counter() - t0) / repeats / len(queries)
     return pred, dt
 

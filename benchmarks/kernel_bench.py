@@ -21,11 +21,74 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bq
+from repro.core.baselines import recall_at_k
+from repro.core.beam import batched_beam_search
 from repro.kernels import ops
 
-from benchmarks.common import emit
+from benchmarks.common import dataset, emit, ground_truth, index_for
 
 HBM_BW = 819e9
+
+
+def beam_width_sweep(ef: int = 64, k: int = 10) -> list[dict]:
+    """Multi-expansion beam search: recall at equal distance-eval budget.
+
+    The beam expansion width L turns the per-hop distance batch from
+    (R,) into (L*R,) — the shape a Pallas/VPU kernel wants.  Budget is
+    held constant across L by capping hops at ceil(H1 / L), where H1 is
+    the greedy (L=1) run's natural mean hop count, so every row spends
+    ~H1*R distance evaluations per query.
+    """
+    idx, _ = index_for("minilm-surrogate")
+    _, queries = dataset("minilm-surrogate")
+    gt = ground_truth("minilm-surrogate", k=k)
+    backend = idx.backend()
+    q = jnp.asarray(queries, jnp.float32)
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    reprs = backend.encode_queries(q)
+    n = idx.sigs.words.shape[0]
+    r = idx.adjacency.shape[1]
+
+    def rerank(res):
+        from repro.core.index import _rerank_f32
+        ids, _ = _rerank_f32(res.ids, q, idx.vectors, k)
+        return np.asarray(ids)
+
+    # greedy reference: its natural fresh-evaluation count defines the
+    # shared budget; every L (including 1) then runs under the same
+    # max_evals cap, so no width gets free extra distance evaluations.
+    # (Fresh evals — not hop slots — are the hardware-honest budget:
+    # each fresh eval is one popcount row regardless of batch shape.)
+    res1 = batched_beam_search(
+        reprs, idx.adjacency, jnp.int32(idx.medoid),
+        dist_fn=backend.dist_fn, ef=ef, n=n, expand=1,
+    )
+    budget = int(round(float(np.asarray(res1.evals).mean())))
+
+    rows = []
+    for expand in (1, 2, 4):
+        run = jax.jit(lambda rep: batched_beam_search(
+            rep, idx.adjacency, jnp.int32(idx.medoid),
+            dist_fn=backend.dist_fn, ef=ef, n=n, expand=expand,
+            max_evals=budget,
+        ))
+        res = run(reprs)
+        jax.block_until_ready(res)
+        t0 = time.perf_counter()
+        res = run(reprs)
+        jax.block_until_ready(res)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "name": f"kernel/beam_expand_L{expand}",
+            "us_per_call": round(dt * 1e6 / len(queries), 1),
+            "recall_at_10": round(recall_at_k(rerank(res), gt), 4),
+            "mean_hops": round(float(np.asarray(res.hops).mean()), 1),
+            "dist_evals_per_query": round(
+                float(np.asarray(res.evals).mean()), 1),
+            "eval_budget": budget,
+            "dist_batch_width": expand * r,
+        })
+    return rows
 
 
 def run() -> list[dict]:
@@ -72,6 +135,7 @@ def run() -> list[dict]:
             "tpu_roofline_mvecs_per_s": round(
                 HBM_BW / (4 * dim) / 1e6, 1),
         })
+    rows.extend(beam_width_sweep())
     return rows
 
 

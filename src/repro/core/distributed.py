@@ -6,9 +6,16 @@ Fleet layout (DESIGN.md §3):
     embarrassingly parallel (the cluster-scale analogue of the paper's
     chunked concurrent linking: zero cross-shard dependencies);
   * a query fans out to all shards (`shard_map`), runs the local
-    symmetric-BQ beam search + local float32 rerank, and the per-shard
-    top-k are all-gathered and merged — one collective of k ids/scores
-    per shard, the classic scatter-gather serving pattern.
+    beam search + local float32 rerank, and the per-shard top-k are
+    all-gathered and merged — one collective of k ids/scores per shard,
+    the classic scatter-gather serving pattern.
+
+The shard-local traversal distance is NOT hand-rolled here: each shard
+constructs the registered metric backend (``repro.core.metric``) from
+its local arrays, so sharded serving navigates in exactly the metric
+space the graph was built in — any registered nav kind (``bq2``,
+``bq1``, ``adc``, ``float32``), with kernel dispatch decided once at
+backend construction (DESIGN.md §2).
 
 Per-chip hot set = (N/S) signatures + adjacency: at 1M x 768 over 256
 chips that is ~3 MB/chip — the paper's DDR5-bandwidth-bound hot loop
@@ -17,19 +24,23 @@ becomes VMEM/HBM-resident on TPU.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.compat import shard_map
 
 from repro.core import bq
 from repro.core.beam import batched_beam_search
 from repro.core.index import QuIVerIndex
-from repro.core.metric import BQ2Backend
+from repro.core.metric import (
+    MetricArrays,
+    encode_queries_for,
+    make_backend,
+)
 from repro.core.vamana import BuildParams
 
 
@@ -40,10 +51,12 @@ class ShardedIndex(NamedTuple):
     medoids: jnp.ndarray      # (S,) int32
     vectors: jnp.ndarray      # (S, n, D) float32 (cold)
     dim: int
+    metric: str = "bq2"       # metric kind the shards were built in
 
 
 def build_sharded(vectors: np.ndarray, n_shards: int,
-                  params: BuildParams | None = None) -> ShardedIndex:
+                  params: BuildParams | None = None,
+                  *, metric: str = "bq2") -> ShardedIndex:
     """Partition + per-shard build (host loop; on a fleet each host
     builds its own shard independently)."""
     params = params or BuildParams()
@@ -51,7 +64,7 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
     parts = np.asarray(vectors[:n]).reshape(n_shards, -1, vectors.shape[-1])
     words, adjs, meds, vecs = [], [], [], []
     for s in range(n_shards):
-        idx = QuIVerIndex.build(jnp.asarray(parts[s]), params)
+        idx = QuIVerIndex.build(jnp.asarray(parts[s]), params, metric=metric)
         words.append(idx.sigs.words)
         adjs.append(idx.adjacency)
         meds.append(idx.medoid)
@@ -62,40 +75,38 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
         medoids=jnp.asarray(meds, dtype=jnp.int32),
         vectors=jnp.stack(vecs),
         dim=vectors.shape[-1],
+        metric=metric,
     )
 
 
 def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
                         n_per_shard: int,
-                        axis: str | tuple = "data"):
+                        axis: str | tuple = "data",
+                        nav: str = "bq2",
+                        expand: int = 1):
     """Compile a fan-out/merge search step over ``mesh[axis]``.
 
-    Returns search(index: ShardedIndex, q_words (Q, 2W), queries (Q, D))
+    Returns search(index: ShardedIndex, q_repr (Q, ...), queries (Q, D))
     -> (global_ids (Q, k) int32, scores (Q, k) f32), replicated.
+    ``q_repr`` is the ``nav`` backend's query representation (use
+    :func:`repro.core.metric.encode_queries_for`).
     """
-    w = 2 * bq.n_words(dim)
-    mask = bq.valid_mask(dim)
-    offset = jnp.float32(4 * dim)
 
-    def local_search(sig_words, adj, medoid, vectors, q_words, queries):
+    def local_search(sig_words, adj, medoid, vectors, q_repr, queries):
         # shard-local arrays arrive with the leading shard dim stripped
         sig_words = sig_words[0]
         adj = adj[0]
         medoid = medoid[0]
         vectors = vectors[0]
-        wn = sig_words.shape[-1] // 2
-
-        def dist_fn(query, ids, valid):
-            rows = sig_words[ids]
-            sim = bq.symmetric_similarity_words(
-                query[..., :wn], query[..., wn:],
-                rows[..., :wn], rows[..., wn:], mask,
-            )
-            return offset - sim.astype(jnp.float32)
+        # one backend per shard, same registry as everything else — the
+        # sharded path owns no private distance function.
+        backend = make_backend(nav, MetricArrays(
+            sigs=bq.Signature(words=sig_words, dim=dim), vectors=vectors,
+        ))
 
         res = batched_beam_search(
-            q_words, adj, medoid, dist_fn=dist_fn, ef=ef,
-            n=n_per_shard,
+            q_repr, adj, medoid, dist_fn=backend.dist_fn, ef=ef,
+            n=n_per_shard, expand=expand,
         )
         # local cold-path rerank to top-k
         safe = jnp.maximum(res.ids, 0)
@@ -131,20 +142,27 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
 
 def search_sharded(index: ShardedIndex, queries: np.ndarray, *,
                    mesh: Mesh | None = None, ef: int = 64, k: int = 10,
-                   axis: str = "data"):
-    """Convenience wrapper: encode queries, fan out, merge."""
+                   axis: str = "data", nav: str | None = None,
+                   expand: int = 1):
+    """Convenience wrapper: encode queries, fan out, merge.
+
+    ``nav`` defaults to the metric the shards were built in, mirroring
+    ``QuIVerIndex.search``.
+    """
+    nav = nav or index.metric
     if mesh is None:
         n_dev = index.sig_words.shape[0]
         mesh = jax.make_mesh((n_dev,), (axis,))
     q = jnp.asarray(queries, jnp.float32)
     q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-    q_words = bq.encode(q).words
+    q_repr = encode_queries_for(nav, q)
     fn = make_sharded_search(
         mesh, dim=index.dim, ef=ef, k=k,
-        n_per_shard=index.sig_words.shape[1], axis=axis,
+        n_per_shard=index.sig_words.shape[1], axis=axis, nav=nav,
+        expand=expand,
     )
     ids, scores = jax.jit(fn)(
         index.sig_words, index.adjacency, index.medoids, index.vectors,
-        q_words, q,
+        q_repr, q,
     )
     return np.asarray(ids), np.asarray(scores)

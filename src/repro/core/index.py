@@ -27,12 +27,7 @@ import numpy as np
 
 from repro.core import bq
 from repro.core.beam import batched_beam_search
-from repro.core.metric import (
-    ADCBackend,
-    BQ1Backend,
-    BQ2Backend,
-    Float32Backend,
-)
+from repro.core.metric import MetricArrays, MetricSpace, make_backend
 from repro.core.vamana import BuildParams, BuildStats, build_graph
 
 NavKind = Literal["bq2", "bq1", "adc", "float32"]
@@ -63,6 +58,21 @@ class QuIVerIndex:
     rotation: jnp.ndarray | None = None
     build_stats: BuildStats | None = None
     metric_kind: NavKind = "bq2"
+    # backends are constructed once per nav kind and cached: kernel
+    # dispatch happens at construction, and beam-search jit caches key on
+    # the backend instance, so reusing it avoids re-trace per query batch.
+    _backends: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    def backend(self, kind: NavKind | None = None) -> MetricSpace:
+        """The metric backend for ``kind`` (default: the index's own)."""
+        kind = kind or self.metric_kind
+        if kind not in self._backends:
+            self._backends[kind] = make_backend(
+                kind, MetricArrays(sigs=self.sigs, vectors=self.vectors)
+            )
+        return self._backends[kind]
 
     # -- construction ------------------------------------------------------
 
@@ -86,7 +96,9 @@ class QuIVerIndex:
             rotation = random_rotation(vectors.shape[-1], rotate_seed)
             encoded = vectors @ rotation
         sigs = bq.encode(encoded)
-        backend = _make_backend(metric, sigs, vectors)
+        backend = make_backend(
+            metric, MetricArrays(sigs=sigs, vectors=vectors)
+        )
         adj, medoid, stats = build_graph(backend, params, verbose=verbose)
         return cls(
             sigs=sigs,
@@ -108,14 +120,23 @@ class QuIVerIndex:
         *,
         ef: int = 64,
         rerank: bool = True,
-        nav: NavKind = "bq2",
+        nav: NavKind | None = None,
+        expand: int = 1,
         query_batch: int = 256,
     ) -> tuple[np.ndarray, np.ndarray]:
-        """(Q, D) float32 queries -> ((Q, k) ids, (Q, k) cosine scores)."""
+        """(Q, D) float32 queries -> ((Q, k) ids, (Q, k) cosine scores).
+
+        ``nav`` defaults to the metric the index was built in; ``expand``
+        is the beam expansion width L (one (L*R,) distance batch/hop).
+        """
         queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
-        enc_in = queries @ self.rotation if self.rotation is not None \
-            else queries
-        backend = _make_backend(nav, self.sigs, self.vectors)
+        backend = self.backend(nav)
+        # signatures were encoded from rotated vectors, so sig-based
+        # backends need rotated queries; the float32 backend holds the
+        # unrotated cold vectors and must see the queries unrotated too.
+        enc_in = queries
+        if self.rotation is not None and backend.kind != "float32":
+            enc_in = queries @ self.rotation
         reprs = backend.encode_queries(enc_in)
         n = self.sigs.words.shape[0]
 
@@ -124,7 +145,7 @@ class QuIVerIndex:
             rep = reprs[s:s + query_batch]
             res = batched_beam_search(
                 rep, self.adjacency, jnp.int32(self.medoid),
-                dist_fn=backend.dist_fn, ef=ef, n=n,
+                dist_fn=backend.dist_fn, ef=ef, n=n, expand=expand,
             )
             ids, scores = _rerank(
                 res.ids, res.dists, queries[s:s + query_batch],
@@ -171,9 +192,10 @@ class QuIVerIndex:
                  int(self.params.alpha * 1000), self.params.chunk,
                  self.params.prune_pool, self.params.reverse_slack,
                  self.params.consolidate_every, self.params.passes,
-                 self.params.seed],
+                 self.params.seed, self.params.beam_expand],
                 dtype=np.int64,
             ),
+            metric_kind=np.array(self.metric_kind),
         )
 
     @classmethod
@@ -184,9 +206,12 @@ class QuIVerIndex:
             m=int(p[0]), ef_construction=int(p[1]), alpha=p[2] / 1000.0,
             chunk=int(p[3]), prune_pool=int(p[4]), reverse_slack=int(p[5]),
             consolidate_every=int(p[6]), passes=int(p[7]), seed=int(p[8]),
+            beam_expand=int(p[9]) if len(p) > 9 else 1,
         )
         vectors = z["vectors"]
         rotation = z["rotation"]
+        # pre-refactor archives carried no metric_kind (always bq2)
+        metric_kind = str(z["metric_kind"]) if "metric_kind" in z else "bq2"
         return cls(
             sigs=bq.Signature(
                 words=jnp.asarray(z["words"]), dim=int(z["dim"])
@@ -196,20 +221,8 @@ class QuIVerIndex:
             params=params,
             vectors=jnp.asarray(vectors) if vectors.size else None,
             rotation=jnp.asarray(rotation) if rotation.size else None,
+            metric_kind=metric_kind,
         )
-
-
-def _make_backend(kind: NavKind, sigs: bq.Signature, vectors):
-    if kind == "bq2":
-        return BQ2Backend(sigs)
-    if kind == "bq1":
-        return BQ1Backend(sigs)
-    if kind == "adc":
-        return ADCBackend(sigs)
-    if kind == "float32":
-        assert vectors is not None, "float32 navigation needs cold vectors"
-        return Float32Backend(vectors)
-    raise ValueError(kind)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

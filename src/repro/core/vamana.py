@@ -49,6 +49,7 @@ class BuildParams:
     consolidate_every: int = 8   # chunks between overflow re-prunes
     passes: int = 1              # full insertion passes over the data
     seed: int = 0
+    beam_expand: int = 1         # beam expansion width L during build
 
     @property
     def r(self) -> int:          # out-degree bound
@@ -76,15 +77,18 @@ def _init_graph(n: int, params: BuildParams, seed: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("backend", "ef", "pool", "r", "alpha", "n")
+    jax.jit,
+    static_argnames=("backend", "ef", "pool", "r", "alpha", "n", "expand"),
 )
 def _chunk_forward(
-    adj, chunk_ids, medoid, *, backend: MetricBackend, ef, pool, r, alpha, n
+    adj, chunk_ids, medoid, *,
+    backend: MetricBackend, ef, pool, r, alpha, n, expand=1,
 ):
     """Beam-search a chunk of nodes and alpha-prune their candidates."""
     queries = backend.query_repr(chunk_ids)
     res = batched_beam_search(
-        queries, adj, medoid, dist_fn=backend.dist_fn, ef=ef, n=n
+        queries, adj, medoid, dist_fn=backend.dist_fn, ef=ef, n=n,
+        expand=expand,
     )
     # remove self from each candidate list, keep the best ``pool``
     is_self = res.ids == chunk_ids[:, None]
@@ -166,9 +170,7 @@ def _consolidate_rows(
     safe = jnp.maximum(rows, 0)
     # distance of each neighbour to the row's own node
     target_repr = backend.query_repr(row_ids)
-    dists = jax.vmap(backend.dist_fn)(
-        target_repr, safe, rows >= 0
-    )
+    dists = backend.dist_many(target_repr, safe, rows >= 0)
     dists = jnp.where(rows >= 0, dists, BIG)
     pw = backend.pairwise(safe)
     new_ids, _ = alpha_prune_batch(rows, dists, pw, r=r, alpha=alpha)
@@ -265,6 +267,7 @@ def build_graph(
                 r=params.r,
                 alpha=params.alpha,
                 n=n,
+                expand=params.beam_expand,
             )
             adj, deg = _apply_forward(
                 adj, deg, chunk_ids, fwd_ids, r_total=params.r_total

@@ -1,0 +1,6 @@
+"""Distributed substrate: logical-axis sharding helpers for the model
+stack (``repro.models``) and the launch/dry-run drivers.
+
+``sharding``       — mesh context, activation constraints, param layouts.
+``cache_sharding`` — batch and KV-cache layouts for serving.
+"""

@@ -1,0 +1,57 @@
+"""Batch and serving-cache layouts (DESIGN.md §6).
+
+Activations and KV caches are data-parallel over their batch dim; KV
+caches additionally TP-shard the head dim (axis 2 of the canonical
+(B, S, H, hd) layout) so decode-time attention reads stay local to the
+tensor-parallel shard.  All rules are divisibility-guarded: a dim that
+does not divide its axis group stays replicated, so reduced smoke
+configs lower on any mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import _axis_size, _entry, logical_map
+
+
+def _batch_spec(mesh: Mesh, lmap: dict, shape: tuple) -> P:
+    dp = lmap["dp"]
+    if shape and dp and shape[0] % _axis_size(mesh, dp) == 0:
+        return P(_entry(dp), *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(mesh: Mesh, specs) -> "specs-like":
+    """Input-batch layout: axis 0 over dp, everything else replicated."""
+    lmap = logical_map(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _batch_spec(mesh, lmap, s.shape)),
+        specs,
+    )
+
+
+def _cache_spec(mesh: Mesh, lmap: dict, shape: tuple,
+                global_batch: int) -> P:
+    dp, tp = lmap["dp"], lmap["tp"]
+    entries = [None] * len(shape)
+    if (shape and shape[0] == global_batch and dp
+            and shape[0] % _axis_size(mesh, dp) == 0):
+        entries[0] = _entry(dp)
+    # canonical KV layout (B, S, H, hd): heads on tp
+    if (len(shape) >= 4 and tp
+            and shape[2] % _axis_size(mesh, tp) == 0):
+        entries[2] = _entry(tp)
+    return P(*entries)
+
+
+def cache_shardings(mesh: Mesh, c_shapes, global_batch: int):
+    """Serving-cache layout: batch over dp, KV heads over tp."""
+    lmap = logical_map(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, _cache_spec(mesh, lmap, s.shape, global_batch)
+        ),
+        c_shapes,
+    )

@@ -1,0 +1,162 @@
+"""Logical-axis sharding: 'dp'/'tp' names over whatever mesh is active.
+
+The model code never mentions physical mesh axes.  It says
+``shard(x, "dp", None, "tp")`` and this module maps the logical names to
+the active mesh's physical axes:
+
+    dp (data/FSDP) -> ("pod", "data")   (whichever exist on the mesh)
+    tp (tensor)    -> ("model",)
+
+Outside a ``use_mesh`` context everything degrades to a no-op, which is
+what the single-device smoke tests and local runs rely on: the same
+model code runs unmodified on 1 CPU device and on a 2x16x16 fleet.
+
+Param layouts (DESIGN.md §6):
+  * training: FSDP on the dp axes over the weight's first big dim +
+    TP on its last dim ("w2"-style down-projections transpose this, so
+    the contraction stays TP-sharded and the psum count stays at one).
+  * serving: TP-only when the params fit per chip — replicating the dp
+    dim removes the per-layer all-gathers from the decode path.
+
+Every leaf rule checks divisibility; a dim that does not divide the axis
+size stays replicated rather than erroring, so reduced smoke configs
+lower on any mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# stack of (mesh, logical_map) — innermost context wins
+_ACTIVE: list = []
+
+_DP_AXES = ("pod", "data")
+_TP_AXES = ("model",)
+
+
+def logical_map(mesh: Mesh) -> dict:
+    """{'dp': physical axes, 'tp': physical axes} present on ``mesh``."""
+    names = set(mesh.axis_names)
+    return {
+        "dp": tuple(a for a in _DP_AXES if a in names),
+        "tp": tuple(a for a in _TP_AXES if a in names),
+    }
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, lmap: dict | None = None):
+    """Activate ``mesh`` for :func:`shard` / :func:`active_ctx`."""
+    _ACTIVE.append((mesh, lmap or logical_map(mesh)))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def active_ctx():
+    """(mesh, logical_map) of the innermost ``use_mesh``, or None."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def _axis_size(mesh: Mesh, axes: tuple) -> int:
+    return math.prod(int(mesh.shape[a]) for a in axes) if axes else 1
+
+
+def _entry(axes: tuple):
+    """PartitionSpec entry for a physical-axes tuple."""
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _spec_for(mesh: Mesh, lmap: dict, shape: tuple, dims: tuple) -> P:
+    """Map per-dim logical names ('dp'/'tp'/None) to a PartitionSpec,
+    dropping any assignment that does not divide the dim."""
+    entries = []
+    for size, name in zip(shape, dims):
+        axes = tuple(lmap.get(name, ())) if name else ()
+        if axes and size % _axis_size(mesh, axes) == 0:
+            entries.append(_entry(axes))
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def shard(x, *dims):
+    """Constrain ``x``'s sharding by logical dim names; no-op outside a
+    ``use_mesh`` context.  ``dims`` has one 'dp'/'tp'/None per array dim."""
+    ctx = active_ctx()
+    if ctx is None:
+        return x
+    mesh, lmap = ctx
+    if len(dims) != x.ndim:
+        raise ValueError(f"shard: {len(dims)} dims for rank-{x.ndim} array")
+    spec = _spec_for(mesh, lmap, x.shape, dims)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter layouts
+# ---------------------------------------------------------------------------
+
+
+def _leaf_name(path) -> str:
+    """Last string key on a tree path ('w1', 'router', ...)."""
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _param_dims(name: str, ndim: int) -> tuple:
+    """Logical dim assignment for one weight leaf.
+
+    Rank-2+ weights shard (dp, tp) over their last two dims; 'w2'-style
+    down-projections transpose to (tp, dp) so the d_ff contraction dim
+    stays TP-sharded; routers and rank<2 leaves replicate.
+    """
+    if ndim < 2 or name == "router":
+        return (None,) * ndim
+    lead = (None,) * (ndim - 2)
+    if name == "w2":
+        return lead + ("tp", "dp")
+    return lead + ("dp", "tp")
+
+
+def param_pspecs(mesh: Mesh, params, lmap: dict) -> "params-like":
+    """PartitionSpecs for a param pytree under an explicit logical map
+    (the ``shard_map`` in_specs path: MoE passes a reduced map when it
+    skips the FSDP gathers)."""
+    def leaf(path, p):
+        dims = _param_dims(_leaf_name(path), p.ndim)
+        return _spec_for(mesh, lmap, p.shape, dims)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def param_shardings(mesh: Mesh, p_shapes) -> "p_shapes-like":
+    """Training layout: FSDP(dp) x TP NamedShardings for the param tree."""
+    lmap = logical_map(mesh)
+    specs = param_pspecs(mesh, p_shapes, lmap)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def serve_param_shardings(
+    mesh: Mesh, p_shapes, param_count: float,
+    *, hbm_budget_bytes: float = 12e9,
+) -> "p_shapes-like":
+    """Serving layout: TP-only when bf16 params fit per chip, else the
+    training FSDP layout (no per-layer dp gathers on the decode path
+    when we can afford to replicate)."""
+    lmap = logical_map(mesh)
+    tp_bytes = 2.0 * param_count / max(_axis_size(mesh, lmap["tp"]), 1)
+    if tp_bytes > hbm_budget_bytes:
+        return param_shardings(mesh, p_shapes)
+    tp_only = {"dp": (), "tp": lmap["tp"]}
+    specs = param_pspecs(mesh, p_shapes, tp_only)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)

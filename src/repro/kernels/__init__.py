@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Accelerator kernels for the QuIVer hot path.
+
+* ``bq_distance`` / ``hamming`` / ``binarize`` — Pallas TPU kernels for
+  the paper's compute hot-spots (compiled Mosaic on TPU, interpreter
+  fallback elsewhere).
+* ``ops``      — jit'd shape-padding wrappers around the raw kernels.
+* ``ref``      — pure-jnp oracles with identical calling conventions.
+* ``dispatch`` — the routing layer every metric backend binds against:
+  one owner for every BQ distance evaluation (DESIGN.md §2).
+"""
+
+from repro.kernels import dispatch  # noqa: F401
+from repro.kernels.dispatch import (  # noqa: F401
+    MetricOps,
+    bq1_ops,
+    bq2_ops,
+    resolve_route,
+)

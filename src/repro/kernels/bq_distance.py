@@ -69,9 +69,15 @@ def bq_distance_pallas(
     dim: int,
     block_q: int = 8,
     block_n: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """(Q, 2W) x (N, 2W) -> (Q, N) int32. Q % block_q == N % block_n == 0."""
+    """(Q, 2W) x (N, 2W) -> (Q, N) int32. Q % block_q == N % block_n == 0.
+
+    ``interpret=None`` resolves by platform: compiled Mosaic on TPU,
+    interpreter elsewhere (correctness-only fallback).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     q, ww2 = q_words.shape
     n = base_words.shape[0]
     w = ww2 // 2

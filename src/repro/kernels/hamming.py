@@ -29,9 +29,15 @@ def hamming_distance_pallas(
     *,
     block_q: int = 8,
     block_n: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """(Q, W) x (N, W) uint32 sign planes -> (Q, N) int32 Hamming."""
+    """(Q, W) x (N, W) uint32 sign planes -> (Q, N) int32 Hamming.
+
+    ``interpret=None`` resolves by platform: compiled Mosaic on TPU,
+    interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     q, w = q_words.shape
     n = base_words.shape[0]
     assert q % block_q == 0 and n % block_n == 0

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.dist.compat import shard_map
 
 from repro.dist.sharding import active_ctx, param_pspecs, shard
 from repro.models.layers import silu

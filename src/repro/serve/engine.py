@@ -25,16 +25,25 @@ import numpy as np
 
 @dataclasses.dataclass
 class Retriever:
-    """QuIVer index + token store for RAG."""
+    """QuIVer index + token store for RAG.
+
+    ``nav=None`` navigates in the metric the index was built in;
+    ``expand`` is the beam expansion width L (DESIGN.md §4).
+    """
     index: Any                      # QuIVerIndex
     doc_tokens: np.ndarray          # (n_docs, doc_len) int32
     embed_fn: Callable              # (B, S) tokens -> (B, D) embeddings
     k: int = 2
     ef: int = 64
+    nav: str | None = None
+    expand: int = 1
 
     def augment(self, tokens: np.ndarray) -> np.ndarray:
         emb = np.asarray(self.embed_fn(jnp.asarray(tokens)))
-        ids, _ = self.index.search(jnp.asarray(emb), k=self.k, ef=self.ef)
+        ids, _ = self.index.search(
+            jnp.asarray(emb), k=self.k, ef=self.ef, nav=self.nav,
+            expand=self.expand,
+        )
         ctx = self.doc_tokens[ids.reshape(len(tokens), -1)]
         ctx = ctx.reshape(len(tokens), -1)
         return np.concatenate([ctx, tokens], axis=1)

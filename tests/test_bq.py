@@ -1,10 +1,41 @@
-"""Unit + property tests for the 2-bit Sign-Magnitude BQ core."""
+"""Unit + property tests for the 2-bit Sign-Magnitude BQ core.
+
+``hypothesis`` is an optional test dependency: when it is installed the
+property tests fuzz their (dim, seed) inputs; without it they fall back
+to a deterministic sample of draws so the suite still runs everywhere.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, no hypothesis installed
+    def settings(**_kw):
+        return lambda f: f
+
+    class st:  # noqa: N801 - mimics hypothesis.strategies
+        @staticmethod
+        def integers(min_value=0, max_value=0):
+            return (min_value, max_value)
+
+    def given(**strategies):
+        def deco(f):
+            # plain zero-arg wrapper (no functools.wraps: pytest would
+            # read the wrapped signature and hunt for fixtures)
+            def run():
+                rng = np.random.default_rng(0)
+                for _ in range(10):
+                    f(**{
+                        k: int(rng.integers(lo, hi + 1))
+                        for k, (lo, hi) in strategies.items()
+                    })
+            run.__name__ = f.__name__
+            run.__doc__ = f.__doc__
+            return run
+        return deco
 
 from repro.core import bq
 

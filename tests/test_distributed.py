@@ -64,7 +64,7 @@ def test_compressed_psum_matches_full_precision_direction():
     out = _run_with_devices(4, """
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.dist.compat import shard_map
         from repro.optim.compress import compressed_psum
 
         mesh = jax.make_mesh((4,), ("data",))
