@@ -18,6 +18,7 @@ from benchmarks import (
     ablation_bits,
     construction,
     kernel_bench,
+    streaming,
     table2_memory,
     table5_recall_qps,
     table6_baselines,
@@ -34,6 +35,7 @@ TABLES = {
     "ablation_adc": ablation_adc,
     "ablation_bits": ablation_bits,
     "construction": construction,
+    "streaming": streaming,
 }
 
 

@@ -1,0 +1,155 @@
+"""Streaming churn: the freshness/recall curve the paper never measures.
+
+A mutable index starts from a batch build, then survives churn cycles
+(default 10) of delete-5% / insert-5%.  After every cycle we measure
+Recall@10 against exact ground truth over the *current* live corpus —
+once with consolidation after each cycle and once without — plus
+insert/delete/consolidate throughput.  The last row compares the
+churned index against a from-scratch rebuild of the final corpus: the
+acceptance bar is recall within 3 points of the rebuild (consolidated
+path).
+
+Scale knobs: REPRO_STREAM_N (initial corpus, default min(BENCH_N,
+4000)), REPRO_STREAM_ROUNDS (default 10), REPRO_STREAM_CHURN (fraction
+per cycle, default 0.05).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import flat_search, recall_at_k
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.data.datasets import make_dataset
+from repro.stream import MutableQuIVerIndex
+
+from benchmarks.common import BENCH_N, BENCH_Q
+
+NAME = "minilm-surrogate"
+STREAM_N = int(os.environ.get("REPRO_STREAM_N", min(BENCH_N, 4000)))
+ROUNDS = int(os.environ.get("REPRO_STREAM_ROUNDS", 10))
+CHURN = float(os.environ.get("REPRO_STREAM_CHURN", 0.05))
+
+PARAMS = BuildParams(m=8, ef_construction=64, prune_pool=64, chunk=256)
+EF, K = 64, 10
+
+
+class _Corpus:
+    """Host-side mirror of the live set: slot id <-> vector."""
+
+    def __init__(self, vectors: np.ndarray, slots: np.ndarray):
+        self.vectors = list(vectors)
+        self.slots = list(int(s) for s in slots)
+
+    def delete(self, rng: np.random.Generator, frac: float) -> np.ndarray:
+        n_kill = max(1, int(len(self.slots) * frac))
+        pick = rng.choice(len(self.slots), size=n_kill, replace=False)
+        killed = np.asarray([self.slots[i] for i in pick])
+        keep = np.ones(len(self.slots), dtype=bool)
+        keep[pick] = False
+        self.vectors = [v for v, m in zip(self.vectors, keep) if m]
+        self.slots = [s for s, m in zip(self.slots, keep) if m]
+        return killed
+
+    def insert(self, vectors: np.ndarray, slots: np.ndarray) -> None:
+        self.vectors.extend(vectors)
+        self.slots.extend(int(s) for s in slots)
+
+    def ground_truth(self, queries: np.ndarray, k: int) -> np.ndarray:
+        mat = np.stack(self.vectors)
+        gt_pos, _ = flat_search(mat, queries, k=k)
+        return np.asarray(self.slots)[gt_pos]
+
+
+def _churn_run(base, fresh_pool, queries, *, consolidate: bool):
+    """One full churn experiment; returns (rows, final corpus, index)."""
+    rng = np.random.default_rng(0)
+    capacity = int(len(base) * (1 + CHURN * (ROUNDS + 1)) + 512)
+    idx = MutableQuIVerIndex.build(
+        jnp.asarray(base), PARAMS, capacity=capacity
+    )
+    corpus = _Corpus(base, np.arange(len(base)))
+    tag = "consol" if consolidate else "noconsol"
+    rows, pool_pos = [], 0
+
+    for rnd in range(1, ROUNDS + 1):
+        kill = corpus.delete(rng, CHURN)
+        t0 = time.perf_counter()
+        idx.delete(kill)
+        t_del = time.perf_counter() - t0
+
+        n_new = len(kill)
+        new_vecs = fresh_pool[pool_pos:pool_pos + n_new]
+        pool_pos += n_new
+        t0 = time.perf_counter()
+        slots = idx.insert(jnp.asarray(new_vecs))
+        t_ins = time.perf_counter() - t0
+        corpus.insert(new_vecs, slots)
+
+        t_con = 0.0
+        if consolidate:
+            t0 = time.perf_counter()
+            idx.consolidate()
+            t_con = time.perf_counter() - t0
+
+        gt = corpus.ground_truth(queries, K)
+        pred, _ = idx.search(jnp.asarray(queries), k=K, ef=EF)
+        rows.append({
+            "name": f"streaming/{tag}_round{rnd}",
+            "us_per_call": round(t_ins * 1e6 / n_new, 1),  # per insert
+            "recall": round(recall_at_k(pred, gt), 4),
+            "n_live": idx.n_live,
+            "insert_per_s": round(n_new / t_ins, 1),
+            "delete_per_s": round(n_new / t_del, 1),
+            "consolidate_s": round(t_con, 3),
+        })
+    return rows, corpus, idx
+
+
+def run() -> list[dict]:
+    total = int(STREAM_N * (1 + CHURN * (ROUNDS + 1))) + 64
+    allvecs, queries = make_dataset(NAME, n=total, queries=BENCH_Q)
+    base, fresh_pool = allvecs[:STREAM_N], allvecs[STREAM_N:]
+
+    rows_c, corpus, idx = _churn_run(
+        base, fresh_pool, queries, consolidate=True
+    )
+    rows_n, _, _ = _churn_run(
+        base, fresh_pool, queries, consolidate=False
+    )
+    rows = rows_c + rows_n
+
+    # from-scratch rebuild of the final (consolidated-path) corpus
+    mat = np.stack(corpus.vectors)
+    t0 = time.perf_counter()
+    rebuilt = QuIVerIndex.build(jnp.asarray(mat), PARAMS)
+    t_build = time.perf_counter() - t0
+    gt_pos, _ = flat_search(mat, queries, k=K)
+    pred_pos, _ = rebuilt.search(jnp.asarray(queries), k=K, ef=EF)
+    rebuild_recall = recall_at_k(pred_pos, gt_pos)
+
+    gt = np.asarray(corpus.slots)[gt_pos]
+    pred, _ = idx.search(jnp.asarray(queries), k=K, ef=EF)
+    churned_recall = recall_at_k(pred, gt)
+
+    rows.append({
+        "name": "streaming/final_vs_rebuild",
+        "us_per_call": round(t_build * 1e6 / len(mat), 1),
+        "churned_recall": round(churned_recall, 4),
+        "rebuild_recall": round(rebuild_recall, 4),
+        "delta_points": round(100 * (rebuild_recall - churned_recall), 2),
+        "rounds": ROUNDS,
+        "churn": CHURN,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run(), "streaming")

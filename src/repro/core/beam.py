@@ -15,6 +15,14 @@ The distance function is pluggable so the same traversal serves the
 paper's symmetric 2-bit navigation, the 1-bit Hamming baseline, the ADC
 ablation and the float32 Vamana reference build — any backend registered
 in ``repro.core.metric``.
+
+Tombstone semantics (streaming subsystem, DESIGN.md §8): an optional
+``node_valid`` mask splits the beam into *navigation* and *results*.
+Dead (tombstoned) nodes are still traversed — their edges keep the
+graph connected between deletions and consolidation, exactly as in
+FreshDiskANN — but a parallel live-only result list is maintained and
+returned, so dead ids never reach rerank.  ``node_valid=None`` is the
+frozen-index fast path and is bit-for-bit the unmasked search.
 """
 
 from __future__ import annotations
@@ -49,6 +57,14 @@ def _merge_beam(ids, dists, expanded, new_ids, new_dists, ef):
     return cat_ids[order], cat_dists[order], cat_exp[order]
 
 
+def _merge_results(ids, dists, new_ids, new_dists, ef):
+    """Merge live candidates into the sorted result list, keep best ``ef``."""
+    cat_ids = jnp.concatenate([ids, new_ids])
+    cat_dists = jnp.concatenate([dists, new_dists])
+    order = jnp.argsort(cat_dists)[:ef]
+    return cat_ids[order], cat_dists[order]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -66,6 +82,7 @@ def beam_search(
     max_hops: int = 0,
     expand: int = 1,
     max_evals: int = 0,
+    node_valid: jnp.ndarray | None = None,   # (n,) bool live mask
 ) -> BeamResult:
     """Best-first beam search from ``start`` toward ``query``.
 
@@ -77,11 +94,17 @@ def beam_search(
     ``max_evals`` (0 = unlimited) stops expanding once that many fresh
     distance evaluations have been spent — the budget knob for
     recall-per-distance-evaluation comparisons across expansion widths.
+
+    ``node_valid`` (optional) is the tombstone mask of a mutable index:
+    beam *navigation* is unchanged (dead nodes are expanded — their
+    edges still route), but the returned ids/dists are drawn from a
+    parallel live-only result list, so tombstoned nodes never surface.
     """
     r = adjacency.shape[1]
     max_hops = max_hops or (4 * ef + 128)
     assert 1 <= expand <= ef, (expand, ef)
     lr = expand * r
+    masked = node_valid is not None
 
     d0 = dist_fn(query, start[None], jnp.ones((1,), jnp.bool_))[0]
     ids = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(start)
@@ -89,9 +112,19 @@ def beam_search(
     # padding entries are marked expanded so they are never picked
     expanded = jnp.ones((ef,), dtype=jnp.bool_).at[0].set(False)
     visited = jnp.zeros((n,), dtype=jnp.bool_).at[start].set(True)
+    if masked:
+        ok0 = node_valid[start]
+        res_ids = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(
+            jnp.where(ok0, start, -1)
+        )
+        res_dists = jnp.full((ef,), INF, dtype=jnp.float32).at[0].set(
+            jnp.where(ok0, d0, INF)
+        )
+    else:
+        res_ids = res_dists = None
 
     def cond(state):
-        ids, dists, expanded, visited, hops, evals = state
+        ids, dists, expanded, *_rest, hops, evals = state
         frontier = (~expanded) & (ids >= 0)
         go = frontier.any() & (hops < max_hops)
         if max_evals:
@@ -99,7 +132,11 @@ def beam_search(
         return go
 
     def body(state):
-        ids, dists, expanded, visited, hops, evals = state
+        if masked:
+            ids, dists, expanded, res_ids, res_dists, visited, hops, \
+                evals = state
+        else:
+            ids, dists, expanded, visited, hops, evals = state
         frontier = (~expanded) & (ids >= 0)
         # stable sort => tie-break by beam position, matching argmin at L=1
         picks = jnp.argsort(jnp.where(frontier, dists, INF))[:expand]
@@ -127,7 +164,26 @@ def beam_search(
             ids, dists, expanded, new_ids, nd, ef
         )
         evals = evals + fresh.sum().astype(jnp.int32)
+        if masked:
+            live = fresh & node_valid[nbrs_safe]
+            res_ids, res_dists = _merge_results(
+                res_ids, res_dists,
+                jnp.where(live, nbrs_safe, -1).astype(jnp.int32),
+                jnp.where(live, nd, INF), ef,
+            )
+            return (ids, dists, expanded, res_ids, res_dists, visited,
+                    hops + 1, evals)
         return ids, dists, expanded, visited, hops + 1, evals
+
+    if masked:
+        state = jax.lax.while_loop(
+            cond, body,
+            (ids, dists, expanded, res_ids, res_dists, visited,
+             jnp.int32(0), jnp.int32(1)),
+        )
+        _, _, _, res_ids, res_dists, _, hops, evals = state
+        return BeamResult(ids=res_ids, dists=res_dists, hops=hops,
+                          evals=evals)
 
     ids, dists, expanded, visited, hops, evals = jax.lax.while_loop(
         cond, body,
@@ -147,12 +203,14 @@ def batched_beam_search(
     max_hops: int = 0,
     expand: int = 1,
     max_evals: int = 0,
+    node_valid: jnp.ndarray | None = None,
 ) -> BeamResult:
     """vmap of :func:`beam_search` over a batch of queries.
 
     ``queries`` is whatever representation ``dist_fn`` consumes, batched on
     axis 0 (packed signature words for BQ navigation, float vectors for
-    ADC / float32 navigation).
+    ADC / float32 navigation).  ``node_valid`` (shared across the batch)
+    is the tombstone mask of a mutable index — see :func:`beam_search`.
     """
     fn = functools.partial(
         beam_search,
@@ -163,4 +221,11 @@ def batched_beam_search(
         expand=expand,
         max_evals=max_evals,
     )
-    return jax.vmap(fn, in_axes=(0, None, None))(queries, adjacency, start)
+    if node_valid is None:
+        return jax.vmap(fn, in_axes=(0, None, None))(
+            queries, adjacency, start
+        )
+    return jax.vmap(
+        lambda q, adj, s, nv: fn(q, adj, s, node_valid=nv),
+        in_axes=(0, None, None, None),
+    )(queries, adjacency, start, node_valid)

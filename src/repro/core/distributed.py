@@ -35,7 +35,7 @@ from repro.dist.compat import shard_map
 
 from repro.core import bq
 from repro.core.beam import batched_beam_search
-from repro.core.index import QuIVerIndex
+from repro.core.index import QuIVerIndex, rerank_f32
 from repro.core.metric import (
     MetricArrays,
     encode_queries_for,
@@ -45,23 +45,42 @@ from repro.core.vamana import BuildParams
 
 
 class ShardedIndex(NamedTuple):
-    """Stacked per-shard index arrays (leading dim = n_shards)."""
+    """Stacked per-shard index arrays (leading dim = n_shards).
+
+    ``live`` is the per-shard validity mask: padding fill from an
+    indivisible partition and streaming tombstones are both False and
+    are excluded from search results *before* the all-gather merge.
+    """
     sig_words: jnp.ndarray    # (S, n, 2W) uint32
     adjacency: jnp.ndarray    # (S, n, R+slack) int32
     medoids: jnp.ndarray      # (S,) int32
     vectors: jnp.ndarray      # (S, n, D) float32 (cold)
     dim: int
     metric: str = "bq2"       # metric kind the shards were built in
+    live: jnp.ndarray | None = None   # (S, n) bool; None == all live
 
 
 def build_sharded(vectors: np.ndarray, n_shards: int,
                   params: BuildParams | None = None,
                   *, metric: str = "bq2") -> ShardedIndex:
     """Partition + per-shard build (host loop; on a fleet each host
-    builds its own shard independently)."""
+    builds its own shard independently).
+
+    Indivisible N is handled by padding the last shard with repeats of
+    the leading vectors; the fill nodes participate in their shard's
+    graph (they are real points, so navigation quality is unaffected)
+    but are masked out of every search result, so all N input vectors
+    — and only those — are retrievable.
+    """
     params = params or BuildParams()
-    n = len(vectors) // n_shards * n_shards
-    parts = np.asarray(vectors[:n]).reshape(n_shards, -1, vectors.shape[-1])
+    n = len(vectors)
+    per = -(-n // n_shards)                      # ceil division
+    pad = per * n_shards - n
+    arr = np.asarray(vectors)
+    if pad:
+        arr = np.concatenate([arr, arr[:pad]], axis=0)
+    parts = arr.reshape(n_shards, per, arr.shape[-1])
+    live = (np.arange(n_shards * per) < n).reshape(n_shards, per)
     words, adjs, meds, vecs = [], [], [], []
     for s in range(n_shards):
         idx = QuIVerIndex.build(jnp.asarray(parts[s]), params, metric=metric)
@@ -76,6 +95,7 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
         vectors=jnp.stack(vecs),
         dim=vectors.shape[-1],
         metric=metric,
+        live=jnp.asarray(live),
     )
 
 
@@ -86,18 +106,24 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
                         expand: int = 1):
     """Compile a fan-out/merge search step over ``mesh[axis]``.
 
-    Returns search(index: ShardedIndex, q_repr (Q, ...), queries (Q, D))
+    Returns search(index arrays..., q_repr (Q, ...), queries (Q, D))
     -> (global_ids (Q, k) int32, scores (Q, k) f32), replicated.
     ``q_repr`` is the ``nav`` backend's query representation (use
-    :func:`repro.core.metric.encode_queries_for`).
+    :func:`repro.core.metric.encode_queries_for`).  ``live`` is the
+    per-shard tombstone/padding mask: dead nodes still route the local
+    beam (FreshDiskANN navigation semantics, see ``repro.core.beam``)
+    but are masked out of the local top-k *before* the all-gather, so
+    one dead-free collective of k ids/scores per shard is merged.
     """
 
-    def local_search(sig_words, adj, medoid, vectors, q_repr, queries):
+    def local_search(sig_words, adj, medoid, vectors, live, q_repr,
+                     queries):
         # shard-local arrays arrive with the leading shard dim stripped
         sig_words = sig_words[0]
         adj = adj[0]
         medoid = medoid[0]
         vectors = vectors[0]
+        live = live[0]
         # one backend per shard, same registry as everything else — the
         # sharded path owns no private distance function.
         backend = make_backend(nav, MetricArrays(
@@ -106,15 +132,11 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
 
         res = batched_beam_search(
             q_repr, adj, medoid, dist_fn=backend.dist_fn, ef=ef,
-            n=n_per_shard, expand=expand,
+            n=n_per_shard, expand=expand, node_valid=live,
         )
-        # local cold-path rerank to top-k
-        safe = jnp.maximum(res.ids, 0)
-        cand = vectors[safe]                          # (Q, ef, D)
-        sims = jnp.einsum("qd,qed->qe", queries, cand)
-        sims = jnp.where(res.ids >= 0, sims, -jnp.inf)
-        scores, pos = jax.lax.top_k(sims, k)
-        ids = jnp.take_along_axis(res.ids, pos, axis=-1)
+        # local cold-path rerank to top-k (res.ids are live-only) —
+        # the single shared rerank, not a private copy
+        ids, scores = rerank_f32(res.ids, queries, vectors, k)
         # globalize ids with the shard offset
         shard_id = jax.lax.axis_index(axis)
         gids = jnp.where(ids >= 0, ids + shard_id * n_per_shard, -1)
@@ -134,7 +156,7 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
         local_search,
         mesh=mesh,
         in_specs=(spec_shard, spec_shard, spec_shard, spec_shard,
-                  P(), P()),
+                  spec_shard, P(), P()),
         out_specs=(P(), P()),
         check_vma=False,
     )
@@ -156,13 +178,27 @@ def search_sharded(index: ShardedIndex, queries: np.ndarray, *,
     q = jnp.asarray(queries, jnp.float32)
     q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
     q_repr = encode_queries_for(nav, q)
-    fn = make_sharded_search(
-        mesh, dim=index.dim, ef=ef, k=k,
-        n_per_shard=index.sig_words.shape[1], axis=axis, nav=nav,
-        expand=expand,
-    )
-    ids, scores = jax.jit(fn)(
+    live = index.live
+    if live is None:
+        live = jnp.ones(index.sig_words.shape[:2], dtype=jnp.bool_)
+    # cache the compiled fan-out: make_sharded_search returns a fresh
+    # closure per call, so without this every search retraces (a
+    # serving loop would recompile per request)
+    key = (mesh, index.dim, ef, k, index.sig_words.shape[1], axis, nav,
+           expand)
+    fn = _SEARCH_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(make_sharded_search(
+            mesh, dim=index.dim, ef=ef, k=k,
+            n_per_shard=index.sig_words.shape[1], axis=axis, nav=nav,
+            expand=expand,
+        ))
+        _SEARCH_CACHE[key] = fn
+    ids, scores = fn(
         index.sig_words, index.adjacency, index.medoids, index.vectors,
-        q_repr, q,
+        live, q_repr, q,
     )
     return np.asarray(ids), np.asarray(scores)
+
+
+_SEARCH_CACHE: dict = {}

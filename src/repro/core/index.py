@@ -32,6 +32,40 @@ from repro.core.vamana import BuildParams, BuildStats, build_graph
 
 NavKind = Literal["bq2", "bq1", "adc", "float32"]
 
+# BuildParams persistence: one named npz field per dataclass field (the
+# old format was a positional int64 array — brittle, and alpha had to be
+# smuggled as milli-units).  ``params_from_npz`` still reads it.
+_PARAM_PREFIX = "param_"
+
+
+def params_to_npz(params: BuildParams) -> dict:
+    """BuildParams -> named npz fields (``param_<name>``)."""
+    return {
+        _PARAM_PREFIX + f.name: np.asarray(getattr(params, f.name))
+        for f in dataclasses.fields(BuildParams)
+    }
+
+
+def params_from_npz(z) -> BuildParams:
+    """Named npz fields -> BuildParams, with the legacy positional
+    int64 ``params`` array as the backward-compat path."""
+    names = {f.name for f in dataclasses.fields(BuildParams)}
+    if _PARAM_PREFIX + "m" in z:
+        kw = {}
+        for name in names:
+            key = _PARAM_PREFIX + name
+            if key in z:
+                val = z[key][()]
+                kw[name] = float(val) if name == "alpha" else int(val)
+        return BuildParams(**kw)
+    p = z["params"]                      # legacy positional archive
+    return BuildParams(
+        m=int(p[0]), ef_construction=int(p[1]), alpha=p[2] / 1000.0,
+        chunk=int(p[3]), prune_pool=int(p[4]), reverse_slack=int(p[5]),
+        consolidate_every=int(p[6]), passes=int(p[7]), seed=int(p[8]),
+        beam_expand=int(p[9]) if len(p) > 9 else 1,
+    )
+
 
 def _normalize(x: jnp.ndarray) -> jnp.ndarray:
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
@@ -187,27 +221,20 @@ class QuIVerIndex:
                 np.asarray(self.rotation)
                 if self.rotation is not None else np.zeros((0,))
             ),
-            params=np.array(
-                [self.params.m, self.params.ef_construction,
-                 int(self.params.alpha * 1000), self.params.chunk,
-                 self.params.prune_pool, self.params.reverse_slack,
-                 self.params.consolidate_every, self.params.passes,
-                 self.params.seed, self.params.beam_expand],
-                dtype=np.int64,
-            ),
             metric_kind=np.array(self.metric_kind),
+            **params_to_npz(self.params),
         )
 
     @classmethod
     def load(cls, path: str) -> "QuIVerIndex":
         z = np.load(path)
-        p = z["params"]
-        params = BuildParams(
-            m=int(p[0]), ef_construction=int(p[1]), alpha=p[2] / 1000.0,
-            chunk=int(p[3]), prune_pool=int(p[4]), reverse_slack=int(p[5]),
-            consolidate_every=int(p[6]), passes=int(p[7]), seed=int(p[8]),
-            beam_expand=int(p[9]) if len(p) > 9 else 1,
-        )
+        if "stream_format" in z:
+            raise ValueError(
+                "this is a streaming archive; load it with "
+                "repro.stream.MutableQuIVerIndex.load (freeze() it for "
+                "an immutable QuIVerIndex)"
+            )
+        params = params_from_npz(z)
         vectors = z["vectors"]
         rotation = z["rotation"]
         # pre-refactor archives carried no metric_kind (always bq2)
@@ -226,25 +253,37 @@ class QuIVerIndex:
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def _rerank_f32(beam_ids, queries, vectors, k):
-    """Cold-path rerank: exact cosine over the ef candidates (§3.3)."""
+def rerank_f32(beam_ids, queries, vectors, k):
+    """Cold-path rerank: exact cosine over the ef candidates (§3.3).
+
+    ``beam_ids`` entries < 0 (padding / masked tombstones) are excluded
+    — their similarity is -inf, so they can only surface as trailing -1
+    ids when fewer than k valid candidates exist.
+    """
     safe = jnp.maximum(beam_ids, 0)
     cand = vectors[safe]                                # (Q, ef, D)
     sims = jnp.einsum("qd,qed->qe", queries, cand)
     sims = jnp.where(beam_ids >= 0, sims, -jnp.inf)
     scores, pos = jax.lax.top_k(sims, k)
     ids = jnp.take_along_axis(beam_ids, pos, axis=-1)
+    ids = jnp.where(jnp.isfinite(scores), ids, -1)
     return ids, scores
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def _topk_by_dist(beam_ids, beam_dists, k):
+def topk_by_dist(beam_ids, beam_dists, k):
     scores, pos = jax.lax.top_k(-beam_dists, k)
     ids = jnp.take_along_axis(beam_ids, pos, axis=-1)
     return ids, scores
 
 
-def _rerank(beam_ids, beam_dists, queries, vectors, k):
+def rerank(beam_ids, beam_dists, queries, vectors, k):
+    """Shared rerank entry: float32 cosine when cold vectors exist,
+    else BQ-distance top-k.  Both exclude invalid (-1) beam ids."""
     if vectors is None:
-        return _topk_by_dist(beam_ids, beam_dists, k)
-    return _rerank_f32(beam_ids, queries, vectors, k)
+        return topk_by_dist(beam_ids, beam_dists, k)
+    return rerank_f32(beam_ids, queries, vectors, k)
+
+
+# pre-streaming private names, kept for any out-of-tree callers
+_rerank, _rerank_f32, _topk_by_dist = rerank, rerank_f32, topk_by_dist

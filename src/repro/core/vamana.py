@@ -17,6 +17,13 @@ concurrency to pure-functional SPMD:
 The device-side chunk ops are jitted once per (shape, param) signature;
 the host driver is a plain Python loop (this is how real accelerator
 fleets drive construction too — host orchestrates, device crunches).
+
+The chunk-level graph surgery itself lives in ``repro.core.linking`` —
+shared, mask-aware primitives with one owner, so the streaming
+subsystem (``repro.stream``) inserts against a live graph with exactly
+the operations this batch builder uses.  The wrappers here jit with a
+*static* backend (arrays are frozen for the whole build); streaming
+jits its own wrappers over traced arrays.
 """
 
 from __future__ import annotations
@@ -30,10 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bq
-from repro.core.beam import INF, batched_beam_search
+from repro.core import bq, linking
 from repro.core.metric import MetricBackend
-from repro.core.prune import alpha_prune_batch
 
 BIG = jnp.float32(3.0e38)
 
@@ -85,78 +90,23 @@ def _chunk_forward(
     backend: MetricBackend, ef, pool, r, alpha, n, expand=1,
 ):
     """Beam-search a chunk of nodes and alpha-prune their candidates."""
-    queries = backend.query_repr(chunk_ids)
-    res = batched_beam_search(
-        queries, adj, medoid, dist_fn=backend.dist_fn, ef=ef, n=n,
-        expand=expand,
+    return linking.chunk_forward(
+        backend, adj, chunk_ids, medoid,
+        ef=ef, pool=pool, r=r, alpha=alpha, n=n, expand=expand,
     )
-    # remove self from each candidate list, keep the best ``pool``
-    is_self = res.ids == chunk_ids[:, None]
-    cids = jnp.where(is_self, -1, res.ids)
-    cdists = jnp.where(is_self, BIG, res.dists)
-    order = jnp.argsort(cdists, axis=-1)[:, :pool]
-    cids = jnp.take_along_axis(cids, order, axis=-1)
-    cdists = jnp.take_along_axis(cdists, order, axis=-1)
-
-    safe = jnp.maximum(cids, 0)
-    pw = backend.pairwise(safe)
-    fwd_ids, fwd_dists = alpha_prune_batch(
-        cids, cdists, pw, r=r, alpha=alpha
-    )
-    return fwd_ids, fwd_dists, res.hops
 
 
 @functools.partial(jax.jit, static_argnames=("r_total",))
 def _apply_forward(adj, deg, chunk_ids, fwd_ids, *, r_total):
-    rows = jnp.full(
-        (fwd_ids.shape[0], r_total), -1, dtype=jnp.int32
-    ).at[:, : fwd_ids.shape[1]].set(fwd_ids)
-    adj = adj.at[chunk_ids].set(rows)
-    deg = deg.at[chunk_ids].set((fwd_ids >= 0).sum(-1).astype(jnp.int32))
-    return adj, deg
+    return linking.apply_forward(adj, deg, chunk_ids, fwd_ids,
+                                 r_total=r_total)
 
 
 @functools.partial(jax.jit, static_argnames=("r_total",))
 def _reverse_append(adj, deg, chunk_ids, fwd_ids, *, r_total):
     """Scatter-append reverse edges src -> tgt with capacity drop."""
-    n = adj.shape[0]
-    b, r = fwd_ids.shape
-    tgt = fwd_ids.reshape(-1)                                   # (B*R,)
-    src = jnp.repeat(chunk_ids, r)                              # (B*R,)
-    valid = tgt >= 0
-    tgt_safe = jnp.where(valid, tgt, 0)
-
-    # skip proposals whose edge already exists
-    exists = (adj[tgt_safe] == src[:, None]).any(-1)
-    valid = valid & ~exists
-
-    # rank of each proposal within its target group (sorted by target)
-    key_sort = jnp.where(valid, tgt, n + 1)
-    order = jnp.argsort(key_sort)
-    tgt_s, src_s, valid_s = key_sort[order], src[order], valid[order]
-    idx = jnp.arange(tgt_s.shape[0])
-    boundary = jnp.concatenate(
-        [jnp.array([True]), tgt_s[1:] != tgt_s[:-1]]
-    )
-    seg_start = jax.lax.cummax(jnp.where(boundary, idx, 0))
-    rank = idx - seg_start
-
-    tgt_w = jnp.where(valid_s, tgt_s, n)       # n == trash row
-    slot = deg[jnp.minimum(tgt_w, n - 1)] + rank
-    ok = valid_s & (slot < r_total)
-    tgt_w = jnp.where(ok, tgt_w, n)
-    slot_w = jnp.where(ok, slot, r_total)      # r_total == trash col
-
-    adj_pad = jnp.full((n + 1, r_total + 1), -1, dtype=jnp.int32)
-    adj_pad = adj_pad.at[:n, :r_total].set(adj)
-    adj_pad = adj_pad.at[tgt_w, slot_w].set(
-        jnp.where(ok, src_s, -1).astype(jnp.int32)
-    )
-    adj = adj_pad[:n, :r_total]
-    deg = deg.at[jnp.minimum(tgt_w, n - 1)].add(
-        ok.astype(jnp.int32) * (tgt_w < n)
-    )
-    return adj, deg, ok.sum()
+    return linking.reverse_append(adj, deg, chunk_ids, fwd_ids,
+                                  r_total=r_total)
 
 
 @functools.partial(
@@ -166,46 +116,14 @@ def _consolidate_rows(
     adj, deg, row_ids, *, backend: MetricBackend, r, alpha, r_total
 ):
     """Re-prune overflowing rows (deg > r) back down to <= r edges."""
-    rows = adj[row_ids]                                  # (B, r_total)
-    safe = jnp.maximum(rows, 0)
-    # distance of each neighbour to the row's own node
-    target_repr = backend.query_repr(row_ids)
-    dists = backend.dist_many(target_repr, safe, rows >= 0)
-    dists = jnp.where(rows >= 0, dists, BIG)
-    pw = backend.pairwise(safe)
-    new_ids, _ = alpha_prune_batch(rows, dists, pw, r=r, alpha=alpha)
-    new_rows = jnp.full(
-        (rows.shape[0], r_total), -1, dtype=jnp.int32
-    ).at[:, :r].set(new_ids)
-    adj = adj.at[row_ids].set(new_rows)
-    deg = deg.at[row_ids].set((new_ids >= 0).sum(-1).astype(jnp.int32))
-    return adj, deg
+    return linking.consolidate_rows(
+        backend, adj, deg, row_ids, r=r, alpha=alpha, r_total=r_total
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "chunk"))
 def _medoid(backend: MetricBackend, centroid_repr, *, chunk: int):
-    n = backend.n
-    n_pad = ((n + chunk - 1) // chunk) * chunk
-    ids = jnp.arange(n_pad, dtype=jnp.int32) % n
-
-    def scan_fn(best, block_ids):
-        d = backend.dist_fn(
-            centroid_repr, block_ids, jnp.ones_like(block_ids, jnp.bool_)
-        )
-        i = jnp.argmin(d)
-        cand = (d[i], block_ids[i])
-        better = cand[0] < best[0]
-        return (
-            jnp.where(better, cand[0], best[0]),
-            jnp.where(better, cand[1], best[1]),
-        ), None
-
-    (best_d, best_i), _ = jax.lax.scan(
-        scan_fn,
-        (BIG, jnp.int32(0)),
-        ids.reshape(-1, chunk),
-    )
-    return best_i
+    return linking.medoid_scan(backend, centroid_repr, chunk=chunk)
 
 
 # ---------------------------------------------------------------------------

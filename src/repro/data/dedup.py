@@ -7,6 +7,15 @@ duplicates — BQ beam-search hit whose *float32-reranked* cosine exceeds
 (build + search never touch float32 except at rerank), which is what
 makes corpus-scale dedup cheap: the paper's 12:1 hot-memory compression
 applies to the dedup working set too.
+
+Two modes:
+
+* :func:`semantic_dedup` — batch: build once over all docs, then scan.
+* :func:`streaming_dedup` — insert-as-you-scan over a mutable index
+  (DESIGN.md §8): each batch is searched against only the *kept* docs
+  so far, survivors are inserted immediately.  Same keep semantics
+  (first occurrence wins), but single-pass — the natural shape for a
+  pipeline that deduplicates while ingesting.
 """
 
 from __future__ import annotations
@@ -16,6 +25,9 @@ import jax.numpy as jnp
 
 from repro.core.index import QuIVerIndex
 from repro.core.vamana import BuildParams
+from repro.stream import MutableQuIVerIndex
+
+_DEFAULT_PARAMS = dict(m=8, ef_construction=48, prune_pool=48, chunk=256)
 
 
 def semantic_dedup(
@@ -32,9 +44,7 @@ def semantic_dedup(
     then for each doc query its neighbourhood; doc i is dropped iff some
     kept doc j < i has cosine(q_i, v_j) >= threshold.
     """
-    params = params or BuildParams(
-        m=8, ef_construction=48, prune_pool=48, chunk=256
-    )
+    params = params or BuildParams(**_DEFAULT_PARAMS)
     x = np.asarray(embeddings, dtype=np.float32)
     idx = QuIVerIndex.build(jnp.asarray(x), params)
     ids, scores = idx.search(
@@ -50,3 +60,67 @@ def semantic_dedup(
                 keep_mask[i] = False
                 break
     return np.nonzero(keep_mask)[0]
+
+
+def streaming_dedup(
+    embeddings: np.ndarray,
+    *,
+    threshold: float = 0.97,
+    params: BuildParams | None = None,
+    ef: int = 32,
+    scan_batch: int = 256,
+    k: int = 16,
+    index: MutableQuIVerIndex | None = None,
+) -> np.ndarray:
+    """Insert-as-you-scan dedup; returns indices of documents to KEEP.
+
+    Each batch is (1) searched against the index of previously-kept
+    docs — a reranked-cosine hit >= ``threshold`` drops the doc — then
+    (2) checked for exact-cosine duplicates *within* the batch (the
+    index cannot see docs that have not been inserted yet), and (3) the
+    survivors are inserted before the next batch is scanned.
+
+    Pass ``index`` to continue an earlier scan (e.g. deduplicating an
+    hourly feed against everything already ingested); by default a
+    fresh mutable index sized to ``len(embeddings)`` is used.
+    """
+    params = params or BuildParams(**_DEFAULT_PARAMS)
+    x = np.asarray(embeddings, dtype=np.float32)
+    x = x / np.maximum(
+        np.linalg.norm(x, axis=-1, keepdims=True), 1e-12
+    )
+    if index is None:
+        index = MutableQuIVerIndex.empty(
+            x.shape[-1], len(x), params
+        )
+    if index.vectors is None:
+        # without the cold tier, search scores are negative BQ
+        # distances and the >= threshold test would never fire
+        raise ValueError(
+            "streaming_dedup needs an index with cold vectors "
+            "(keep_vectors=True) — thresholds are reranked cosines"
+        )
+    keep: list[int] = []
+    for s in range(0, len(x), scan_batch):
+        batch = x[s:s + scan_batch]
+        if index.n_live:
+            ids, scores = index.search(
+                jnp.asarray(batch), k=k, ef=ef
+            )
+            dup = ((np.asarray(ids) >= 0)
+                   & (np.asarray(scores) >= threshold)).any(axis=1)
+        else:
+            dup = np.zeros(len(batch), dtype=bool)
+        # within-batch: exact cosine against earlier survivors
+        sims = batch @ batch.T
+        survivors: list[int] = []
+        for i in range(len(batch)):
+            if dup[i]:
+                continue
+            if survivors and (sims[i, survivors] >= threshold).any():
+                continue
+            survivors.append(i)
+        if survivors:
+            index.insert(jnp.asarray(batch[survivors]))
+            keep.extend(s + i for i in survivors)
+    return np.asarray(keep, dtype=np.int64)

@@ -27,16 +27,24 @@ import numpy as np
 class Retriever:
     """QuIVer index + token store for RAG.
 
+    ``index`` may be an immutable :class:`QuIVerIndex` or a streaming
+    :class:`repro.stream.MutableQuIVerIndex` — with the latter the
+    corpus can grow *while serving* via :meth:`add_documents` (the hot
+    path stays the BQ beam search either way, DESIGN.md §8).
+
     ``nav=None`` navigates in the metric the index was built in;
     ``expand`` is the beam expansion width L (DESIGN.md §4).
+    ``pad_token`` fills the context slots of missing hits (search
+    returns -1 ids when the beam finds fewer than k live documents).
     """
-    index: Any                      # QuIVerIndex
+    index: Any                      # QuIVerIndex | MutableQuIVerIndex
     doc_tokens: np.ndarray          # (n_docs, doc_len) int32
     embed_fn: Callable              # (B, S) tokens -> (B, D) embeddings
     k: int = 2
     ef: int = 64
     nav: str | None = None
     expand: int = 1
+    pad_token: int = 0
 
     def augment(self, tokens: np.ndarray) -> np.ndarray:
         emb = np.asarray(self.embed_fn(jnp.asarray(tokens)))
@@ -44,9 +52,46 @@ class Retriever:
             jnp.asarray(emb), k=self.k, ef=self.ef, nav=self.nav,
             expand=self.expand,
         )
-        ctx = self.doc_tokens[ids.reshape(len(tokens), -1)]
+        ids = np.asarray(ids).reshape(len(tokens), -1)
+        # ids outside the token store — -1 padding (beam found < k live
+        # docs) or slots beyond a lagging doc_tokens — must not gather a
+        # real document; clamp for the gather, then blank out
+        in_store = (ids >= 0) & (ids < len(self.doc_tokens))
+        safe = np.clip(ids, 0, len(self.doc_tokens) - 1)
+        ctx = np.asarray(self.doc_tokens)[safe]
+        ctx = np.where(in_store[..., None], ctx, self.pad_token)
         ctx = ctx.reshape(len(tokens), -1)
         return np.concatenate([ctx, tokens], axis=1)
+
+    def add_documents(
+        self, doc_tokens: np.ndarray, embeddings: np.ndarray | None = None
+    ) -> np.ndarray:
+        """Insert documents into a *mutable* index while serving.
+
+        Returns the slot ids the index assigned.  The token store is
+        slot-addressed: it is grown to the index capacity on first use
+        so reclaimed slots (delete + consolidate) overwrite in place.
+        """
+        if not hasattr(self.index, "insert"):
+            raise TypeError(
+                "add_documents needs a mutable index (repro.stream); "
+                f"got {type(self.index).__name__}"
+            )
+        doc_tokens = np.atleast_2d(np.asarray(doc_tokens, dtype=np.int32))
+        if embeddings is None:
+            embeddings = np.asarray(
+                self.embed_fn(jnp.asarray(doc_tokens))
+            )
+        ids = np.asarray(self.index.insert(jnp.asarray(embeddings)))
+        cap = self.index.capacity
+        if len(self.doc_tokens) < cap:
+            pad = np.full(
+                (cap - len(self.doc_tokens), self.doc_tokens.shape[1]),
+                self.pad_token, dtype=self.doc_tokens.dtype,
+            )
+            self.doc_tokens = np.concatenate([self.doc_tokens, pad])
+        self.doc_tokens[ids] = doc_tokens
+        return ids
 
 
 class ServeEngine:

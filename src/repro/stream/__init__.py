@@ -1,0 +1,22 @@
+"""Streaming index subsystem: live insert/delete/consolidate in BQ space.
+
+The paper builds QuIVer once and serves it frozen; this package gives
+the same BQ-native graph a mutable lifecycle (DESIGN.md §8):
+
+* :class:`~repro.stream.mutable.MutableQuIVerIndex` — live insert
+  (chunk-linked with the shared Vamana primitives), tombstone delete,
+  FreshDiskANN-style consolidation, ``freeze()`` snapshots and
+  persistence, all over capacity-preallocated accelerator arrays.
+* :class:`~repro.stream.sharded.StreamingShardedIndex` — round-robin
+  insert routing over per-shard mutable indexes with tombstone-masked
+  fan-out search.
+"""
+
+from repro.stream.mutable import MutableQuIVerIndex, StreamStats
+from repro.stream.sharded import StreamingShardedIndex
+
+__all__ = [
+    "MutableQuIVerIndex",
+    "StreamStats",
+    "StreamingShardedIndex",
+]

@@ -1,0 +1,638 @@
+"""MutableQuIVerIndex — the paper's index with a live mutation lifecycle.
+
+Layout (DESIGN.md §8): every array is preallocated at ``capacity`` and
+lives on the accelerator for its whole life — the IVF-RaBitQ lesson
+(PAPERS.md) that build and search should share device-resident arrays,
+extended to a full mutable lifecycle:
+
+    words      (capacity, 2W) uint32   packed 2-bit SM signatures (hot)
+    adjacency  (capacity, R+slack) int32
+    deg        (capacity,) int32       degree counters
+    vectors    (capacity, D) float32   cold rerank tier (optional)
+    live       (capacity,) bool        tombstone mask (host-owned)
+
+``insert`` binarizes the new vectors and chunk-links them against the
+*live* graph with exactly the shared Vamana primitives the batch
+builder uses (``repro.core.linking``) — the paper's chunked concurrent
+linking (§4.1) run against a non-frozen graph.  ``delete`` only flips
+tombstones: dead nodes keep routing beam searches (FreshDiskANN
+semantics) but never surface in results, courtesy of the ``node_valid``
+path in ``repro.core.beam``.  ``consolidate`` repairs the topology —
+each dead node's out-edges are spliced into its in-neighbours'
+candidate pools and alpha-pruned in the index's own registered metric
+space — then reclaims the dead slots for reuse.  ``freeze`` compacts
+the live set into an immutable :class:`QuIVerIndex`.
+
+Jit discipline: every device op here takes the mutable arrays as
+*traced* arguments and constructs the registered metric backend inside
+the trace (the ``repro.core.distributed`` pattern).  Cache keys are
+(shapes, static params) only — shapes are pinned by ``capacity``, so
+mutations never retrace.  Partial chunks are padded to a small set of
+bucket sizes to bound the number of traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bq
+from repro.core.beam import batched_beam_search
+from repro.core.index import (
+    QuIVerIndex,
+    params_from_npz,
+    params_to_npz,
+    rerank_f32,
+    topk_by_dist,
+)
+from repro.core.linking import medoid_scan
+from repro.core.metric import MetricArrays, encode_queries_for, make_backend
+from repro.core.vamana import BuildParams
+from repro.stream.consolidate import link_chunk, overflow_rows, repair_rows
+
+_BUCKETS = (16, 64, 256)
+
+
+def _normalize(x: jnp.ndarray) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def _pad_ids(ids: np.ndarray, size: int) -> jnp.ndarray:
+    out = np.full((size,), -1, dtype=np.int32)
+    out[: len(ids)] = ids
+    return jnp.asarray(out)
+
+
+def _bucket(n: int, chunk: int) -> int:
+    """Smallest padding bucket >= n (bounds the jit trace count)."""
+    for b in sorted(set(_BUCKETS) | {chunk}):
+        if b >= n:
+            return b
+    return chunk
+
+
+def _mk_backend(kind, dim, words, vectors):
+    return make_backend(
+        kind, MetricArrays(sigs=bq.Signature(words=words, dim=dim),
+                           vectors=vectors)
+    )
+
+
+# ---------------------------------------------------------------------------
+# device ops — arrays traced, backend constructed inside the trace
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "dim", "ef", "pool", "r", "alpha", "n",
+                     "expand", "r_total"),
+)
+def _link_op(words, vectors, adj, deg, live, chunk_ids, medoid, *,
+             kind, dim, ef, pool, r, alpha, n, expand, r_total):
+    backend = _mk_backend(kind, dim, words, vectors)
+    return link_chunk(
+        backend, adj, deg, live, chunk_ids, medoid,
+        ef=ef, pool=pool, r=r, alpha=alpha, n=n, expand=expand,
+        r_total=r_total,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "dim", "r", "alpha", "r_total", "pool"),
+)
+def _repair_op(words, vectors, adj, deg, live, row_ids, *,
+               kind, dim, r, alpha, r_total, pool):
+    backend = _mk_backend(kind, dim, words, vectors)
+    return repair_rows(
+        backend, adj, deg, live, row_ids,
+        r=r, alpha=alpha, r_total=r_total, pool=pool,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "dim", "r", "alpha", "r_total"),
+)
+def _overflow_op(words, vectors, adj, deg, live, row_ids, *,
+                 kind, dim, r, alpha, r_total):
+    backend = _mk_backend(kind, dim, words, vectors)
+    return overflow_rows(
+        backend, adj, deg, live, row_ids,
+        r=r, alpha=alpha, r_total=r_total,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "dim", "ef", "n", "expand", "k",
+                     "use_rerank"),
+)
+def _search_op(words, vectors, adj, live, medoid, reprs, queries, *,
+               kind, dim, ef, n, expand, k, use_rerank):
+    backend = _mk_backend(kind, dim, words, vectors)
+    res = batched_beam_search(
+        reprs, adj, medoid, dist_fn=backend.dist_fn, ef=ef, n=n,
+        expand=expand, node_valid=live,
+    )
+    if use_rerank and vectors is not None:
+        return rerank_f32(res.ids, queries, vectors, k)
+    return topk_by_dist(res.ids, res.dists, k)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "dim", "chunk"))
+def _medoid_op(words, vectors, live, *, kind, dim, chunk):
+    backend = _mk_backend(kind, dim, words, vectors)
+    live_f = live.astype(jnp.float32)
+    denom = jnp.maximum(live_f.sum(), 1.0)
+    if vectors is not None:
+        c = (vectors * live_f[:, None]).sum(0) / denom
+    else:
+        levels = bq.decode_levels(bq.Signature(words=words, dim=dim))
+        c = (levels * live_f[:, None]).sum(0) / denom
+    centroid = backend.encode_queries(c[None])[0]
+    return medoid_scan(backend, centroid, chunk=chunk, node_valid=live)
+
+
+# ---------------------------------------------------------------------------
+# the mutable index
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Cumulative mutation accounting (since construction or load)."""
+
+    inserts: int = 0
+    deletes: int = 0
+    consolidations: int = 0
+    slots_reclaimed: int = 0
+    rows_repaired: int = 0
+    reverse_edges_added: int = 0
+
+
+class MutableQuIVerIndex:
+    """A QuIVer index that supports live insert/delete/consolidate.
+
+    Construct with :meth:`empty` (streaming from scratch),
+    :meth:`build` (batch build + headroom) or :meth:`from_index`
+    (adopt an existing immutable index).
+    """
+
+    def __init__(
+        self,
+        *,
+        capacity: int,
+        dim: int,
+        params: BuildParams,
+        metric_kind: str = "bq2",
+        keep_vectors: bool = True,
+        rotation: jnp.ndarray | None = None,
+    ):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        w2 = 2 * bq.n_words(dim)
+        self.capacity = int(capacity)
+        self.dim = int(dim)
+        self.params = params
+        self.metric_kind = metric_kind
+        self.rotation = rotation
+        self.words = jnp.zeros((capacity, w2), dtype=jnp.uint32)
+        self.adjacency = jnp.full(
+            (capacity, params.r_total), -1, dtype=jnp.int32
+        )
+        self.deg = jnp.zeros((capacity,), dtype=jnp.int32)
+        self.vectors = (
+            jnp.zeros((capacity, dim), dtype=jnp.float32)
+            if keep_vectors else None
+        )
+        self.live = np.zeros((capacity,), dtype=bool)
+        self.allocated = np.zeros((capacity,), dtype=bool)
+        self.size = 0                    # allocation high-water mark
+        self.medoid = -1                 # -1 until the first insert
+        self.generation = 0              # bumped on every mutation
+        self.stats = StreamStats()
+        self._free: list[int] = []       # reclaimed slots, reused first
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_index(
+        cls, index: QuIVerIndex, *, capacity: int | None = None
+    ) -> "MutableQuIVerIndex":
+        """Adopt a built :class:`QuIVerIndex` (default headroom: 2x)."""
+        n = index.sigs.words.shape[0]
+        capacity = capacity or 2 * n
+        if capacity < n:
+            raise ValueError(f"capacity {capacity} < index size {n}")
+        out = cls(
+            capacity=capacity,
+            dim=index.sigs.dim,
+            params=index.params,
+            metric_kind=index.metric_kind,
+            keep_vectors=index.vectors is not None,
+            rotation=index.rotation,
+        )
+        out.words = out.words.at[:n].set(index.sigs.words)
+        out.adjacency = out.adjacency.at[:n].set(index.adjacency)
+        out.deg = out.deg.at[:n].set(
+            (index.adjacency >= 0).sum(-1).astype(jnp.int32)
+        )
+        if out.vectors is not None:
+            out.vectors = out.vectors.at[:n].set(index.vectors)
+        out.live[:n] = True
+        out.allocated[:n] = True
+        out.size = n
+        out.medoid = int(index.medoid)
+        return out
+
+    @classmethod
+    def build(
+        cls,
+        vectors: jnp.ndarray,
+        params: BuildParams | None = None,
+        *,
+        capacity: int | None = None,
+        metric: str = "bq2",
+        **build_kw,
+    ) -> "MutableQuIVerIndex":
+        """Batch-build (two-stage Vamana) then adopt with headroom."""
+        idx = QuIVerIndex.build(
+            jnp.asarray(vectors), params, metric=metric, **build_kw
+        )
+        return cls.from_index(idx, capacity=capacity)
+
+    @classmethod
+    def empty(
+        cls,
+        dim: int,
+        capacity: int,
+        params: BuildParams | None = None,
+        *,
+        metric: str = "bq2",
+        keep_vectors: bool = True,
+        rotation: jnp.ndarray | None = None,
+    ) -> "MutableQuIVerIndex":
+        return cls(
+            capacity=capacity,
+            dim=dim,
+            params=params or BuildParams(),
+            metric_kind=metric,
+            keep_vectors=keep_vectors,
+            rotation=rotation,
+        )
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+    @property
+    def n_dead(self) -> int:
+        return int((self.allocated & ~self.live).sum())
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - self.size + len(self._free)
+
+    def __len__(self) -> int:
+        return self.n_live
+
+    def memory_breakdown(self) -> dict[str, int]:
+        sig_bytes = self.words.size * 4
+        adj_bytes = self.adjacency.size * 4 + self.deg.size * 4
+        mask_bytes = 2 * self.capacity  # live + allocated, host-side
+        cold = self.vectors.size * 4 if self.vectors is not None else 0
+        return {
+            "hot_signature_bytes": int(sig_bytes),
+            "hot_adjacency_bytes": int(adj_bytes),
+            "hot_mask_bytes": int(mask_bytes),
+            "hot_total_bytes": int(sig_bytes + adj_bytes + mask_bytes),
+            "cold_vector_bytes": int(cold),
+            "total_bytes": int(sig_bytes + adj_bytes + mask_bytes + cold),
+        }
+
+    def _live_dev(self) -> jnp.ndarray:
+        return jnp.asarray(self.live)
+
+    # -- mutation ----------------------------------------------------------
+
+    def _allocate(self, count: int) -> np.ndarray:
+        take = min(count, len(self._free))
+        ids = self._free[:take]
+        fresh = count - take
+        if self.size + fresh > self.capacity:
+            raise ValueError(
+                f"insert of {count} exceeds capacity: "
+                f"{self.free_slots} slots free of {self.capacity} "
+                f"(consolidate() reclaims tombstoned slots)"
+            )
+        del self._free[:take]
+        ids = ids + list(range(self.size, self.size + fresh))
+        self.size += fresh
+        return np.asarray(ids, dtype=np.int32)
+
+    def insert(self, vectors: jnp.ndarray) -> np.ndarray:
+        """Insert a batch of float32 vectors; returns their slot ids.
+
+        Vectors are L2-normalized and binarized, then chunk-linked
+        against the live graph: beam search from the medoid, alpha-prune
+        in the index's metric space, forward + reverse edge install —
+        the shared primitives of ``repro.core.linking``.
+        """
+        v = _normalize(jnp.asarray(vectors, dtype=jnp.float32))
+        if v.ndim == 1:
+            v = v[None]
+        if v.shape[-1] != self.dim:
+            raise ValueError(f"dim mismatch: {v.shape[-1]} != {self.dim}")
+        if v.shape[0] == 0:
+            return np.empty((0,), dtype=np.int32)
+        ids = self._allocate(v.shape[0])
+        pre_live = self.n_live
+
+        enc = v @ self.rotation if self.rotation is not None else v
+        sig_words = bq.encode(enc).words
+        dev_ids = jnp.asarray(ids)
+        self.words = self.words.at[dev_ids].set(sig_words)
+        if self.vectors is not None:
+            self.vectors = self.vectors.at[dev_ids].set(v)
+        self.live[ids] = True
+        self.allocated[ids] = True
+        if self.medoid < 0 or pre_live == 0:
+            # empty (or fully-tombstoned) graph: a dead medoid inside an
+            # all-dead component could strand the new nodes — re-anchor
+            self.medoid = int(ids[0])
+
+        p = self.params
+        live_before = 0
+        pos = 0
+        while pos < len(ids):
+            # adapt the chunk to the current graph size: a chunk links
+            # against a frozen snapshot, so never link more nodes at
+            # once than the graph already holds (bootstrap quality)
+            live_before = self.n_live - (len(ids) - pos)
+            take = min(p.chunk, max(16, live_before), len(ids) - pos)
+            block = ids[pos:pos + take]
+            pos += take
+            padded = _pad_ids(block, _bucket(take, p.chunk))
+            self.adjacency, self.deg, added = _link_op(
+                self.words, self.vectors, self.adjacency, self.deg,
+                self._live_dev(), padded, jnp.int32(self.medoid),
+                kind=self.metric_kind, dim=self.dim,
+                ef=p.ef_construction, pool=p.prune_pool, r=p.r,
+                alpha=p.alpha, n=self.capacity, expand=p.beam_expand,
+                r_total=p.r_total,
+            )
+            self.stats.reverse_edges_added += int(added)
+        self._consolidate_overflow()
+        self.stats.inserts += len(ids)
+        self.generation += 1
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ``ids``; returns how many were live.
+
+        Dead nodes keep routing beam searches until :meth:`consolidate`
+        splices them out and reclaims their slots.
+        """
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        if len(ids) and (ids.min() < 0 or ids.max() >= self.capacity):
+            raise ValueError(f"ids out of range [0, {self.capacity})")
+        was_live = self.live[ids].sum()
+        self.live[ids] = False
+        self.stats.deletes += int(was_live)
+        self.generation += 1
+        return int(was_live)
+
+    def _batched_rows(self, rows: np.ndarray, op) -> None:
+        """Run a row-repair device op over bucketed batches of rows."""
+        chunk = self.params.chunk
+        for s in range(0, len(rows), chunk):
+            block = rows[s:s + chunk]
+            padded = _pad_ids(block, _bucket(len(block), chunk))
+            self.adjacency, self.deg = op(padded)
+
+    def _consolidate_overflow(self) -> None:
+        """Re-prune rows whose degree overflowed r (build-time analogue)."""
+        deg_host = np.asarray(self.deg)
+        overflow = np.nonzero(deg_host > self.params.r)[0].astype(np.int32)
+        if overflow.size == 0:
+            return
+        p = self.params
+        self._batched_rows(
+            overflow,
+            lambda row_ids: _overflow_op(
+                self.words, self.vectors, self.adjacency, self.deg,
+                self._live_dev(), row_ids,
+                kind=self.metric_kind, dim=self.dim, r=p.r,
+                alpha=p.alpha, r_total=p.r_total,
+            ),
+        )
+
+    def consolidate(self) -> dict[str, int]:
+        """FreshDiskANN-style repair + slot reclamation.
+
+        For every live row that points at a tombstone, splice the dead
+        neighbours' own live out-edges into the row's candidate pool
+        and alpha-prune it in the registered metric space.  Then clear
+        the dead rows, reclaim their slots for reuse, and re-elect the
+        medoid if it died.
+        """
+        dead_mask = self.allocated & ~self.live
+        dead = np.nonzero(dead_mask)[0]
+        report = {"dead": int(dead.size), "repaired_rows": 0,
+                  "reclaimed": int(dead.size)}
+        if dead.size == 0:
+            return report
+
+        # compute the points-at-dead mask on device: only a (capacity,)
+        # bool comes back, never the full adjacency matrix
+        adj = self.adjacency
+        dead_mask_dev = jnp.asarray(dead_mask)
+        points_at_dead = np.asarray(
+            ((adj >= 0) & dead_mask_dev[jnp.clip(adj, 0, None)]).any(axis=1)
+        )
+        affected = np.nonzero(self.live & points_at_dead)[0].astype(
+            np.int32
+        )
+        report["repaired_rows"] = int(affected.size)
+
+        p = self.params
+        if affected.size:
+            self._batched_rows(
+                affected,
+                lambda row_ids: _repair_op(
+                    self.words, self.vectors, self.adjacency, self.deg,
+                    self._live_dev(), row_ids,
+                    kind=self.metric_kind, dim=self.dim, r=p.r,
+                    alpha=p.alpha, r_total=p.r_total, pool=p.prune_pool,
+                ),
+            )
+
+        # clear + reclaim the dead slots
+        dead_dev = jnp.asarray(dead.astype(np.int32))
+        self.adjacency = self.adjacency.at[dead_dev].set(-1)
+        self.deg = self.deg.at[dead_dev].set(0)
+        self.allocated[dead] = False
+        self._free.extend(int(i) for i in dead)
+
+        # re-elect the medoid if it died (or was never set)
+        if self.n_live and (self.medoid < 0 or not self.live[self.medoid]):
+            self.medoid = int(_medoid_op(
+                self.words, self.vectors, self._live_dev(),
+                kind=self.metric_kind, dim=self.dim, chunk=4096,
+            ))
+        elif self.n_live == 0:
+            self.medoid = -1
+
+        self.stats.consolidations += 1
+        self.stats.rows_repaired += report["repaired_rows"]
+        self.stats.slots_reclaimed += report["reclaimed"]
+        self.generation += 1
+        return report
+
+    # -- search ------------------------------------------------------------
+
+    def search(
+        self,
+        queries: jnp.ndarray,
+        k: int = 10,
+        *,
+        ef: int = 64,
+        rerank: bool = True,
+        nav: str | None = None,
+        expand: int = 1,
+        query_batch: int = 256,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Tombstone-aware search: same contract as ``QuIVerIndex.search``
+        but dead/never-inserted slots cannot appear in the results."""
+        queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
+        if queries.ndim == 1:
+            queries = queries[None]
+        nq = queries.shape[0]
+        if self.n_live == 0:
+            return (np.full((nq, k), -1, np.int32),
+                    np.full((nq, k), -np.inf, np.float32))
+        kind = nav or self.metric_kind
+        enc_in = queries
+        if self.rotation is not None and kind != "float32":
+            enc_in = queries @ self.rotation
+        reprs = encode_queries_for(kind, enc_in)
+        live = self._live_dev()
+
+        out_ids, out_scores = [], []
+        for s in range(0, nq, query_batch):
+            ids, scores = _search_op(
+                self.words, self.vectors, self.adjacency, live,
+                jnp.int32(max(self.medoid, 0)),
+                reprs[s:s + query_batch], queries[s:s + query_batch],
+                kind=kind, dim=self.dim, ef=ef, n=self.capacity,
+                expand=expand, k=k, use_rerank=rerank,
+            )
+            out_ids.append(np.asarray(ids))
+            out_scores.append(np.asarray(scores))
+        return np.concatenate(out_ids), np.concatenate(out_scores)
+
+    # -- snapshots ---------------------------------------------------------
+
+    def freeze(self) -> QuIVerIndex:
+        """Compact the live set into an immutable :class:`QuIVerIndex`.
+
+        Live slots keep their relative order; edges to tombstones are
+        dropped (they are already absent after :meth:`consolidate`).
+        With zero churn this is exactly the arrays the index was built
+        with, so searches are bit-identical to the source index.
+        """
+        if self.n_live == 0:
+            raise ValueError("cannot freeze an empty index")
+        live_idx = np.nonzero(self.live)[0]
+        remap = np.full((self.capacity + 1,), -1, dtype=np.int32)
+        remap[live_idx] = np.arange(live_idx.size, dtype=np.int32)
+
+        sel = jnp.asarray(live_idx.astype(np.int32))
+        words = self.words[sel]
+        vectors = self.vectors[sel] if self.vectors is not None else None
+        adj_host = np.asarray(self.adjacency)[live_idx]
+        adj_new = remap[np.clip(adj_host, 0, None)]
+        adj_new[adj_host < 0] = -1
+
+        medoid = self.medoid
+        if medoid < 0 or not self.live[medoid]:
+            medoid = int(_medoid_op(
+                self.words, self.vectors, self._live_dev(),
+                kind=self.metric_kind, dim=self.dim, chunk=4096,
+            ))
+        return QuIVerIndex(
+            sigs=bq.Signature(words=words, dim=self.dim),
+            adjacency=jnp.asarray(adj_new),
+            medoid=int(remap[medoid]),
+            params=self.params,
+            vectors=vectors,
+            rotation=self.rotation,
+            metric_kind=self.metric_kind,
+        )
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            stream_format=np.int64(1),
+            words=np.asarray(self.words),
+            dim=np.int64(self.dim),
+            adjacency=np.asarray(self.adjacency),
+            deg=np.asarray(self.deg),
+            vectors=(
+                np.asarray(self.vectors)
+                if self.vectors is not None else np.zeros((0,))
+            ),
+            rotation=(
+                np.asarray(self.rotation)
+                if self.rotation is not None else np.zeros((0,))
+            ),
+            live=self.live,
+            allocated=self.allocated,
+            free=np.asarray(self._free, dtype=np.int64),
+            size=np.int64(self.size),
+            medoid=np.int64(self.medoid),
+            generation=np.int64(self.generation),
+            metric_kind=np.array(self.metric_kind),
+            **params_to_npz(self.params),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "MutableQuIVerIndex":
+        z = np.load(path)
+        if "stream_format" not in z:
+            # an immutable QuIVerIndex archive: adopt it
+            return cls.from_index(QuIVerIndex.load(path))
+        params = params_from_npz(z)
+        dim = int(z["dim"])
+        vectors = z["vectors"]
+        rotation = z["rotation"]
+        out = cls(
+            capacity=z["words"].shape[0],
+            dim=dim,
+            params=params,
+            metric_kind=str(z["metric_kind"]),
+            keep_vectors=bool(vectors.size),
+            rotation=jnp.asarray(rotation) if rotation.size else None,
+        )
+        out.words = jnp.asarray(z["words"])
+        out.adjacency = jnp.asarray(z["adjacency"])
+        out.deg = jnp.asarray(z["deg"])
+        if vectors.size:
+            out.vectors = jnp.asarray(vectors)
+        out.live = z["live"].astype(bool)
+        out.allocated = z["allocated"].astype(bool)
+        out._free = [int(i) for i in z["free"]]
+        out.size = int(z["size"])
+        out.medoid = int(z["medoid"])
+        out.generation = int(z["generation"])
+        return out

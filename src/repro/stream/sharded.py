@@ -1,0 +1,174 @@
+"""Shard-local streaming: mutable QuIVer shards behind one fan-out API.
+
+Fleet layout (DESIGN.md §3/§8): each shard owns a
+:class:`MutableQuIVerIndex` over its own capacity-preallocated arrays.
+Inserts are routed round-robin so shards stay balanced under churn;
+deletes route by the shard encoded in the global id; searches snapshot
+the per-shard arrays into a :class:`ShardedIndex` (stacked, leading dim
+= n_shards) whose ``live`` mask carries every shard's tombstones into
+the ``shard_map`` fan-out — dead nodes are filtered from each local
+top-k *before* the all-gather merge, so the collective stays one
+(k ids, k scores) pair per shard.
+
+Global id scheme: ``gid = shard * capacity_per_shard + slot``.  Slots
+are reclaimed by consolidation, so a gid is unique among *live* ids at
+any instant but may be reused after its document is deleted and the
+shard consolidated — the usual semantics of a slotted streaming store.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.distributed import ShardedIndex, search_sharded
+from repro.core.vamana import BuildParams
+from repro.stream.mutable import MutableQuIVerIndex
+
+import jax.numpy as jnp
+
+
+class StreamingShardedIndex:
+    """Round-robin streaming over per-shard mutable indexes."""
+
+    def __init__(self, shards: list[MutableQuIVerIndex]):
+        if not shards:
+            raise ValueError("need at least one shard")
+        caps = {s.capacity for s in shards}
+        dims = {s.dim for s in shards}
+        kinds = {s.metric_kind for s in shards}
+        if len(caps) != 1 or len(dims) != 1 or len(kinds) != 1:
+            raise ValueError(
+                "shards must share capacity/dim/metric "
+                f"(got {caps}/{dims}/{kinds})"
+            )
+        self.shards = shards
+        self.capacity_per_shard = caps.pop()
+        self.dim = dims.pop()
+        self.metric_kind = kinds.pop()
+        self._rr = 0                      # round-robin insert cursor
+        self._snapshot: ShardedIndex | None = None
+        self._snapshot_gens: tuple[int, ...] | None = None
+
+    @classmethod
+    def empty(
+        cls,
+        dim: int,
+        *,
+        n_shards: int,
+        capacity_per_shard: int,
+        params: BuildParams | None = None,
+        metric: str = "bq2",
+        keep_vectors: bool = True,
+    ) -> "StreamingShardedIndex":
+        return cls([
+            MutableQuIVerIndex.empty(
+                dim, capacity_per_shard, params, metric=metric,
+                keep_vectors=keep_vectors,
+            )
+            for _ in range(n_shards)
+        ])
+
+    # -- id scheme ---------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_live(self) -> int:
+        return sum(s.n_live for s in self.shards)
+
+    def _to_global(self, shard: int, slots: np.ndarray) -> np.ndarray:
+        return shard * self.capacity_per_shard + np.asarray(slots)
+
+    def _to_local(self, gids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        gids = np.asarray(gids, dtype=np.int64)
+        return gids // self.capacity_per_shard, \
+            gids % self.capacity_per_shard
+
+    # -- mutation ----------------------------------------------------------
+
+    def insert(self, vectors) -> np.ndarray:
+        """Round-robin insert; returns global ids in input order.
+
+        All-or-nothing: capacity is checked across every target shard
+        *before* any shard mutates, so a full shard can never leave the
+        fleet with untracked live vectors."""
+        v = np.asarray(vectors, dtype=np.float32)
+        if v.ndim == 1:
+            v = v[None]
+        owner = (self._rr + np.arange(len(v))) % self.n_shards
+        counts = np.bincount(owner, minlength=self.n_shards)
+        for s, need in enumerate(counts):
+            if need > self.shards[s].free_slots:
+                raise ValueError(
+                    f"shard {s} needs {need} slots but has "
+                    f"{self.shards[s].free_slots} free of "
+                    f"{self.shards[s].capacity} "
+                    f"(consolidate() reclaims tombstoned slots)"
+                )
+        self._rr = int((self._rr + len(v)) % self.n_shards)
+        gids = np.empty((len(v),), dtype=np.int64)
+        for s in range(self.n_shards):
+            take = np.nonzero(owner == s)[0]
+            if take.size == 0:
+                continue
+            slots = self.shards[s].insert(v[take])
+            gids[take] = self._to_global(s, slots)
+        return gids
+
+    def delete(self, gids) -> int:
+        """Tombstone global ids; returns how many were live."""
+        shard, slot = self._to_local(np.atleast_1d(gids))
+        if len(shard) and (shard.min() < 0 or shard.max() >= self.n_shards):
+            raise ValueError("global id out of range")
+        removed = 0
+        for s in range(self.n_shards):
+            take = shard == s
+            if take.any():
+                removed += self.shards[s].delete(slot[take])
+        return removed
+
+    def consolidate(self) -> list[dict]:
+        """Per-shard repair + reclamation (embarrassingly parallel)."""
+        return [s.consolidate() for s in self.shards]
+
+    # -- search ------------------------------------------------------------
+
+    def snapshot(self) -> ShardedIndex:
+        """Stack the per-shard mutable arrays into a ShardedIndex whose
+        ``live`` mask carries tombstones into the fan-out search.
+
+        Cached on the shard generation counters: an unchanged index
+        serves every search from the same stacked arrays instead of
+        re-copying the fleet per request.
+        """
+        if any(s.vectors is None for s in self.shards):
+            raise ValueError("sharded streaming search needs cold vectors")
+        gens = tuple(s.generation for s in self.shards)
+        if self._snapshot is not None and gens == self._snapshot_gens:
+            return self._snapshot
+        self._snapshot = ShardedIndex(
+            sig_words=jnp.stack([s.words for s in self.shards]),
+            adjacency=jnp.stack([s.adjacency for s in self.shards]),
+            medoids=jnp.asarray(
+                [max(s.medoid, 0) for s in self.shards], dtype=jnp.int32
+            ),
+            vectors=jnp.stack([s.vectors for s in self.shards]),
+            dim=self.dim,
+            metric=self.metric_kind,
+            live=jnp.asarray(
+                np.stack([s.live for s in self.shards])
+            ),
+        )
+        self._snapshot_gens = gens
+        return self._snapshot
+
+    def search(self, queries, *, ef: int = 64, k: int = 10,
+               nav: str | None = None, expand: int = 1,
+               mesh=None):
+        """Fan-out/merge search over all shards (global ids)."""
+        return search_sharded(
+            self.snapshot(), queries, mesh=mesh, ef=ef, k=k,
+            nav=nav, expand=expand,
+        )
