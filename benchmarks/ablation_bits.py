@@ -13,7 +13,6 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import bq
 from repro.core.baselines import recall_at_k
 from repro.core.index import QuIVerIndex
 

@@ -3,13 +3,13 @@
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.baselines import flat_search, recall_at_k
+from repro.core.baselines import flat_search
 from repro.core.index import QuIVerIndex
 from repro.core.vamana import BuildParams
 from repro.data.datasets import make_dataset
@@ -18,7 +18,6 @@ OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 # benchmark scale (1M in the paper; reduced for the CPU container —
 # override with REPRO_BENCH_N)
-import os
 BENCH_N = int(os.environ.get("REPRO_BENCH_N", 10_000))
 BENCH_Q = int(os.environ.get("REPRO_BENCH_Q", 200))
 

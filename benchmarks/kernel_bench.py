@@ -23,7 +23,6 @@ import numpy as np
 from repro.core import bq
 from repro.core.baselines import recall_at_k
 from repro.core.beam import batched_beam_search
-from repro.kernels import ops
 
 from benchmarks.common import dataset, emit, ground_truth, index_for
 

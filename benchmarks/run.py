@@ -17,6 +17,7 @@ from benchmarks import (
     ablation_adc,
     ablation_bits,
     construction,
+    filtered,
     kernel_bench,
     streaming,
     table2_memory,
@@ -36,6 +37,7 @@ TABLES = {
     "ablation_bits": ablation_bits,
     "construction": construction,
     "streaming": streaming,
+    "filtered": filtered,
 }
 
 

@@ -9,7 +9,6 @@ over a 4x dimensionality range while cold grows 4x.
 from __future__ import annotations
 
 from repro.core import bq
-from repro.core.vamana import BuildParams
 
 from benchmarks.common import BENCH_N, emit, index_for
 

@@ -6,7 +6,6 @@
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.baselines import flat_search, recall_at_k
 from repro.core.index import QuIVerIndex

@@ -2,7 +2,10 @@
 
 End-to-end driver (deliverable (b)): the LM embeds a corpus, QuIVer
 indexes the embeddings (2-bit hot path), and generation prepends the
-retrieved documents' tokens to each prompt before prefill.
+retrieved documents' tokens to each prompt before prefill.  The second
+half demos *filtered* retrieval (DESIGN.md §9): the corpus is tagged
+with language labels and the retriever is pinned to one language — the
+predicate runs as packed bitset ops inside the BQ beam search.
 
     PYTHONPATH=src python examples/rag_serve.py
 """
@@ -14,6 +17,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config
 from repro.core.index import QuIVerIndex
 from repro.core.vamana import BuildParams
+from repro.filter import Any
 from repro.models.model import build_model
 from repro.serve.engine import Retriever, ServeEngine, mean_pool_embedder
 
@@ -53,6 +57,30 @@ def main():
     print("retrieval-augmented  :", augmented[0].tolist())
     print("context per prompt   :",
           retriever.augment(prompts).shape[1] - prompts.shape[1], "tokens")
+
+    # 4. filtered retrieval: tag each document with a language and pin
+    # the retriever to German — every retrieved context document now
+    # matches the predicate, enforced inside the beam search itself
+    LANGS = {"en": 0, "de": 1, "fr": 2}
+    doc_lang = rng.integers(0, len(LANGS), n_docs)
+    index.attach_labels(list(doc_lang), n_labels=len(LANGS))
+    index.build_label_entries(min_count=16)
+
+    de_retriever = Retriever(index=index, doc_tokens=corpus,
+                             embed_fn=embed_fn, k=2, ef=32,
+                             filter=LANGS["de"])
+    de_out = engine.generate(prompts, max_new=8, retriever=de_retriever)
+    hits, _ = index.search(jnp.asarray(doc_emb[:4]), k=2, ef=32,
+                           filter=LANGS["de"])
+    print("german-only generation:", de_out[0].tolist())
+    print("german-only hits      :", hits.tolist(),
+          "(labels:", [doc_lang[h] for h in hits.ravel() if h >= 0], ")")
+    # predicates compose: Any(en, fr) == "anything but German"
+    hits_ef, _ = index.search(jnp.asarray(doc_emb[:4]), k=2, ef=32,
+                              filter=Any(LANGS["en"], LANGS["fr"]))
+    assert all(doc_lang[h] != LANGS["de"] for h in hits_ef.ravel()
+               if h >= 0)
+    print("en|fr hits            :", hits_ef.tolist())
 
 
 if __name__ == "__main__":

@@ -11,7 +11,6 @@ repro.launch.dryrun.)
 import argparse
 import dataclasses
 
-import jax
 
 from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig, TokenPipeline

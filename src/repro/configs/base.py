@@ -12,7 +12,6 @@ import dataclasses
 import math
 from typing import Literal
 
-import jax.numpy as jnp
 
 Family = Literal["dense", "moe", "hybrid", "ssm", "encdec", "vlm"]
 
@@ -109,7 +108,6 @@ class ArchConfig:
         d, hd = self.d_model, self.head_dim_
         total = self.padded_vocab * d * 2          # embed + lm_head
         period, groups = self.pattern()
-        enc_layers = self.n_layers
         for pos in range(period):
             kind = self.layer_kind(pos)
             n = groups

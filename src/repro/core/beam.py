@@ -16,13 +16,22 @@ paper's symmetric 2-bit navigation, the 1-bit Hamming baseline, the ADC
 ablation and the float32 Vamana reference build — any backend registered
 in ``repro.core.metric``.
 
-Tombstone semantics (streaming subsystem, DESIGN.md §8): an optional
-``node_valid`` mask splits the beam into *navigation* and *results*.
-Dead (tombstoned) nodes are still traversed — their edges keep the
-graph connected between deletions and consolidation, exactly as in
-FreshDiskANN — but a parallel live-only result list is maintained and
-returned, so dead ids never reach rerank.  ``node_valid=None`` is the
-frozen-index fast path and is bit-for-bit the unmasked search.
+Two-mask semantics (DESIGN.md §8/§9): the beam splits *navigation*
+from *results* under two independent, composable masks —
+
+* ``node_valid`` (tombstones, streaming subsystem): dead nodes are
+  still traversed — their edges keep the graph connected between
+  deletions and consolidation, exactly as in FreshDiskANN — but never
+  returned;
+* ``result_valid`` (filtered search, ``repro.filter``): non-matching
+  nodes are traversed freely — the predicate restricts what may be
+  *returned*, never where the beam may *walk* — so filtered search
+  over a mutable index composes with deletes for free.
+
+Either mask alone, or their conjunction, drives one parallel
+valid-only result list maintained inside the traversal; with both
+``None`` the loop carries no result list at all and is bit-for-bit the
+unmasked search.
 """
 
 from __future__ import annotations
@@ -44,6 +53,14 @@ class BeamResult(NamedTuple):
     dists: jnp.ndarray   # (ef,) float32, INF padded
     hops: jnp.ndarray    # () int32 — number of expansion rounds performed
     evals: jnp.ndarray   # () int32 — fresh distance evaluations performed
+
+
+def _conjoin(node_valid, result_valid):
+    """Combine the tombstone and predicate result masks (None == all
+    valid); the single owner of the two-mask conjunction semantics."""
+    if node_valid is not None and result_valid is not None:
+        return node_valid & result_valid
+    return node_valid if node_valid is not None else result_valid
 
 
 def _merge_beam(ids, dists, expanded, new_ids, new_dists, ef):
@@ -82,7 +99,8 @@ def beam_search(
     max_hops: int = 0,
     expand: int = 1,
     max_evals: int = 0,
-    node_valid: jnp.ndarray | None = None,   # (n,) bool live mask
+    node_valid: jnp.ndarray | None = None,     # (n,) bool live mask
+    result_valid: jnp.ndarray | None = None,   # (n,) bool predicate mask
 ) -> BeamResult:
     """Best-first beam search from ``start`` toward ``query``.
 
@@ -95,16 +113,20 @@ def beam_search(
     distance evaluations have been spent — the budget knob for
     recall-per-distance-evaluation comparisons across expansion widths.
 
-    ``node_valid`` (optional) is the tombstone mask of a mutable index:
-    beam *navigation* is unchanged (dead nodes are expanded — their
-    edges still route), but the returned ids/dists are drawn from a
-    parallel live-only result list, so tombstoned nodes never surface.
+    ``node_valid`` (optional) is the tombstone mask of a mutable index;
+    ``result_valid`` (optional) is a filter-predicate match mask
+    (``repro.filter``).  Under either (or both — they conjoin), beam
+    *navigation* is unchanged: masked-out nodes are still expanded and
+    their edges still route.  Only the returned ids/dists are drawn
+    from a parallel valid-only result list, so tombstoned and
+    non-matching nodes never surface.
     """
     r = adjacency.shape[1]
     max_hops = max_hops or (4 * ef + 128)
     assert 1 <= expand <= ef, (expand, ef)
     lr = expand * r
-    masked = node_valid is not None
+    res_valid = _conjoin(node_valid, result_valid)
+    masked = res_valid is not None
 
     d0 = dist_fn(query, start[None], jnp.ones((1,), jnp.bool_))[0]
     ids = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(start)
@@ -113,7 +135,7 @@ def beam_search(
     expanded = jnp.ones((ef,), dtype=jnp.bool_).at[0].set(False)
     visited = jnp.zeros((n,), dtype=jnp.bool_).at[start].set(True)
     if masked:
-        ok0 = node_valid[start]
+        ok0 = res_valid[start]
         res_ids = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(
             jnp.where(ok0, start, -1)
         )
@@ -165,7 +187,7 @@ def beam_search(
         )
         evals = evals + fresh.sum().astype(jnp.int32)
         if masked:
-            live = fresh & node_valid[nbrs_safe]
+            live = fresh & res_valid[nbrs_safe]
             res_ids, res_dists = _merge_results(
                 res_ids, res_dists,
                 jnp.where(live, nbrs_safe, -1).astype(jnp.int32),
@@ -204,13 +226,15 @@ def batched_beam_search(
     expand: int = 1,
     max_evals: int = 0,
     node_valid: jnp.ndarray | None = None,
+    result_valid: jnp.ndarray | None = None,
 ) -> BeamResult:
     """vmap of :func:`beam_search` over a batch of queries.
 
     ``queries`` is whatever representation ``dist_fn`` consumes, batched on
     axis 0 (packed signature words for BQ navigation, float vectors for
-    ADC / float32 navigation).  ``node_valid`` (shared across the batch)
-    is the tombstone mask of a mutable index — see :func:`beam_search`.
+    ADC / float32 navigation).  ``node_valid`` (tombstones) and
+    ``result_valid`` (filter predicate), both shared across the batch,
+    are the two result masks of :func:`beam_search`.
     """
     fn = functools.partial(
         beam_search,
@@ -221,11 +245,12 @@ def batched_beam_search(
         expand=expand,
         max_evals=max_evals,
     )
-    if node_valid is None:
+    res_valid = _conjoin(node_valid, result_valid)
+    if res_valid is None:
         return jax.vmap(fn, in_axes=(0, None, None))(
             queries, adjacency, start
         )
     return jax.vmap(
         lambda q, adj, s, nv: fn(q, adj, s, node_valid=nv),
         in_axes=(0, None, None, None),
-    )(queries, adjacency, start, node_valid)
+    )(queries, adjacency, start, res_valid)

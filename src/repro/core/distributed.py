@@ -42,6 +42,15 @@ from repro.core.metric import (
     make_backend,
 )
 from repro.core.vamana import BuildParams
+from repro.filter import (
+    DEFAULT_SELECTIVITY_FLOOR,
+    Label,
+    entry_label,
+    estimate_selectivity,
+    eval_mask,
+    validate,
+    widened_ef,
+)
 
 
 class ShardedIndex(NamedTuple):
@@ -50,6 +59,13 @@ class ShardedIndex(NamedTuple):
     ``live`` is the per-shard validity mask: padding fill from an
     indivisible partition and streaming tombstones are both False and
     are excluded from search results *before* the all-gather merge.
+
+    ``label_words`` / ``label_entries`` (optional) carry the per-shard
+    filtered-search state (DESIGN.md §9): packed label bitsets stacked
+    shard-major, and per-(shard, label) entry points.  A filtered
+    query's predicate is evaluated per shard and pushed down into the
+    fan-out as the beam's ``result_valid`` mask, so every shard merges
+    only matching live ids — the top-k collective never widens.
     """
     sig_words: jnp.ndarray    # (S, n, 2W) uint32
     adjacency: jnp.ndarray    # (S, n, R+slack) int32
@@ -58,11 +74,17 @@ class ShardedIndex(NamedTuple):
     dim: int
     metric: str = "bq2"       # metric kind the shards were built in
     live: jnp.ndarray | None = None   # (S, n) bool; None == all live
+    label_words: jnp.ndarray | None = None   # (S, n, W_l) uint32
+    n_labels: int = 0
+    label_entries: jnp.ndarray | None = None  # (S, n_labels) int32, -1
+    label_counts: np.ndarray | None = None    # (n_labels,) fleet-wide
 
 
 def build_sharded(vectors: np.ndarray, n_shards: int,
                   params: BuildParams | None = None,
-                  *, metric: str = "bq2") -> ShardedIndex:
+                  *, metric: str = "bq2",
+                  labels=None, n_labels: int | None = None,
+                  label_entry_min: int = 32) -> ShardedIndex:
     """Partition + per-shard build (host loop; on a fleet each host
     builds its own shard independently).
 
@@ -71,6 +93,14 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
     graph (they are real points, so navigation quality is unaffected)
     but are masked out of every search result, so all N input vectors
     — and only those — are retrievable.
+
+    ``labels`` (optional, one int or iterable of ints per vector)
+    attaches filter labels: each shard packs its slice into a
+    :class:`~repro.filter.labels.LabelStore` and builds per-label
+    entry points (``label_entry_min`` member floor), enabling
+    ``search_sharded(filter=...)`` predicate pushdown.  Padding fill
+    rows inherit the repeated vectors' labels but stay masked by
+    ``live``, so they never surface.
     """
     params = params or BuildParams()
     n = len(vectors)
@@ -81,9 +111,29 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
         arr = np.concatenate([arr, arr[:pad]], axis=0)
     parts = arr.reshape(n_shards, per, arr.shape[-1])
     live = (np.arange(n_shards * per) < n).reshape(n_shards, per)
+    label_parts = None
+    if labels is not None:
+        if len(labels) != n:
+            raise ValueError(f"{len(labels)} label rows for {n} vectors")
+        labels = list(labels)
+        if n_labels is None:
+            flat = [x for item in labels for x in (
+                (item,) if np.isscalar(item) else tuple(item))]
+            n_labels = int(max(flat)) + 1 if flat else 1
+        label_parts = [
+            (labels + labels[:pad])[s * per:(s + 1) * per]
+            for s in range(n_shards)
+        ]
     words, adjs, meds, vecs = [], [], [], []
+    lwords, lentries, lcounts = [], [], []
     for s in range(n_shards):
         idx = QuIVerIndex.build(jnp.asarray(parts[s]), params, metric=metric)
+        if label_parts is not None:
+            store = idx.attach_labels(label_parts[s], n_labels=n_labels)
+            idx.build_label_entries(min_count=label_entry_min)
+            lwords.append(store.words)
+            lentries.append(store.entries)
+            lcounts.append(store.counts)
         words.append(idx.sigs.words)
         adjs.append(idx.adjacency)
         meds.append(idx.medoid)
@@ -96,6 +146,14 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
         dim=vectors.shape[-1],
         metric=metric,
         live=jnp.asarray(live),
+        label_words=jnp.stack(lwords) if lwords else None,
+        n_labels=n_labels or 0,
+        label_entries=(
+            jnp.asarray(np.stack(lentries)) if lentries else None
+        ),
+        # fleet-wide popcounts for selectivity routing (pad fill rows
+        # inflate these by < 1 shard's worth — estimates, not truth)
+        label_counts=np.sum(lcounts, axis=0) if lcounts else None,
     )
 
 
@@ -106,24 +164,27 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
                         expand: int = 1):
     """Compile a fan-out/merge search step over ``mesh[axis]``.
 
-    Returns search(index arrays..., q_repr (Q, ...), queries (Q, D))
-    -> (global_ids (Q, k) int32, scores (Q, k) f32), replicated.
-    ``q_repr`` is the ``nav`` backend's query representation (use
-    :func:`repro.core.metric.encode_queries_for`).  ``live`` is the
-    per-shard tombstone/padding mask: dead nodes still route the local
-    beam (FreshDiskANN navigation semantics, see ``repro.core.beam``)
-    but are masked out of the local top-k *before* the all-gather, so
-    one dead-free collective of k ids/scores per shard is merged.
+    Returns search(index arrays..., result_valid (S, n), q_repr
+    (Q, ...), queries (Q, D)) -> (global_ids (Q, k) int32, scores
+    (Q, k) f32), replicated.  ``q_repr`` is the ``nav`` backend's query
+    representation (use :func:`repro.core.metric.encode_queries_for`).
+    ``live`` is the per-shard tombstone/padding mask and
+    ``result_valid`` the per-shard filter-predicate mask (all-True when
+    unfiltered): dead and non-matching nodes still route the local beam
+    (FreshDiskANN navigation semantics, see ``repro.core.beam``) but
+    are masked out of the local top-k *before* the all-gather, so one
+    collective of k already-filtered ids/scores per shard is merged.
     """
 
-    def local_search(sig_words, adj, medoid, vectors, live, q_repr,
-                     queries):
+    def local_search(sig_words, adj, medoid, vectors, live,
+                     result_valid, q_repr, queries):
         # shard-local arrays arrive with the leading shard dim stripped
         sig_words = sig_words[0]
         adj = adj[0]
         medoid = medoid[0]
         vectors = vectors[0]
         live = live[0]
+        result_valid = result_valid[0]
         # one backend per shard, same registry as everything else — the
         # sharded path owns no private distance function.
         backend = make_backend(nav, MetricArrays(
@@ -133,6 +194,7 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
         res = batched_beam_search(
             q_repr, adj, medoid, dist_fn=backend.dist_fn, ef=ef,
             n=n_per_shard, expand=expand, node_valid=live,
+            result_valid=result_valid,
         )
         # local cold-path rerank to top-k (res.ids are live-only) —
         # the single shared rerank, not a private copy
@@ -156,20 +218,56 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
         local_search,
         mesh=mesh,
         in_specs=(spec_shard, spec_shard, spec_shard, spec_shard,
-                  spec_shard, P(), P()),
+                  spec_shard, spec_shard, P(), P()),
         out_specs=(P(), P()),
         check_vma=False,
     )
 
 
+def sharded_count_fn(index: ShardedIndex):
+    """``label -> member popcount`` across all shards.
+
+    Uses the precomputed ``label_counts`` carried by the index (kept
+    fresh by ``build_sharded`` / ``StreamingShardedIndex.snapshot``);
+    falls back to a per-label device popcount for hand-assembled
+    indexes, cached for the lifetime of the returned closure.
+    """
+    if index.label_counts is not None:
+        counts = index.label_counts
+        return lambda label: int(counts[label])
+    live = index.live
+    cache: dict[int, int] = {}
+
+    def count(label: int) -> int:
+        if label not in cache:
+            member = eval_mask(index.label_words, Label(label))
+            if live is not None:
+                member = member & live
+            cache[label] = int(member.sum())
+        return cache[label]
+
+    return count
+
+
 def search_sharded(index: ShardedIndex, queries: np.ndarray, *,
                    mesh: Mesh | None = None, ef: int = 64, k: int = 10,
                    axis: str = "data", nav: str | None = None,
-                   expand: int = 1):
+                   expand: int = 1, filter=None,
+                   selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR):
     """Convenience wrapper: encode queries, fan out, merge.
 
     ``nav`` defaults to the metric the shards were built in, mirroring
     ``QuIVerIndex.search``.
+
+    ``filter`` (optional label predicate) is pushed down per shard: the
+    predicate mask is evaluated against each shard's packed label
+    bitsets and rides the fan-out as the local beam's ``result_valid``,
+    with ``ef`` widened by the popcount-estimated selectivity and each
+    shard starting from its own per-label entry point when one exists.
+    Every shard therefore contributes only matching live ids to the
+    merge — the collective stays one (k ids, k scores) pair per shard.
+    (There is no per-shard brute-force route: a shard's match set is
+    already 1/S of the corpus, and the masked merge is exact.)
     """
     nav = nav or index.metric
     if mesh is None:
@@ -181,22 +279,45 @@ def search_sharded(index: ShardedIndex, queries: np.ndarray, *,
     live = index.live
     if live is None:
         live = jnp.ones(index.sig_words.shape[:2], dtype=jnp.bool_)
+
+    result_valid = jnp.ones(index.sig_words.shape[:2], dtype=jnp.bool_)
+    medoids = index.medoids
+    ef_run = ef
+    if filter is not None:
+        if index.label_words is None:
+            raise ValueError(
+                "filtered sharded search needs label_words (build with "
+                "labels= or snapshot a labeled streaming index)"
+            )
+        expr = validate(filter, index.n_labels)
+        count_fn = sharded_count_fn(index)
+        n_live = int(live.sum())
+        sel = estimate_selectivity(expr, count_fn, n_live)
+        # (S, n) predicate mask, evaluated shard-major on device
+        result_valid = eval_mask(index.label_words, expr)
+        ef_run = widened_ef(
+            ef, sel, selectivity_floor, index.sig_words.shape[1]
+        )
+        lbl = entry_label(expr, count_fn)
+        if lbl is not None and index.label_entries is not None:
+            ent = index.label_entries[:, lbl]
+            medoids = jnp.where(ent >= 0, ent, medoids).astype(jnp.int32)
     # cache the compiled fan-out: make_sharded_search returns a fresh
     # closure per call, so without this every search retraces (a
     # serving loop would recompile per request)
-    key = (mesh, index.dim, ef, k, index.sig_words.shape[1], axis, nav,
-           expand)
+    key = (mesh, index.dim, ef_run, k, index.sig_words.shape[1], axis,
+           nav, expand)
     fn = _SEARCH_CACHE.get(key)
     if fn is None:
         fn = jax.jit(make_sharded_search(
-            mesh, dim=index.dim, ef=ef, k=k,
+            mesh, dim=index.dim, ef=ef_run, k=k,
             n_per_shard=index.sig_words.shape[1], axis=axis, nav=nav,
             expand=expand,
         ))
         _SEARCH_CACHE[key] = fn
     ids, scores = fn(
-        index.sig_words, index.adjacency, index.medoids, index.vectors,
-        live, q_repr, q,
+        index.sig_words, index.adjacency, medoids, index.vectors,
+        live, result_valid, q_repr, q,
     )
     return np.asarray(ids), np.asarray(scores)
 

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Literal
 
 import jax
@@ -29,6 +28,17 @@ from repro.core import bq
 from repro.core.beam import batched_beam_search
 from repro.core.metric import MetricArrays, MetricSpace, make_backend
 from repro.core.vamana import BuildParams, BuildStats, build_graph
+from repro.filter import (
+    DEFAULT_SELECTIVITY_FLOOR,
+    LabelStore,
+    brute_force_topk,
+    build_label_entries,
+    entry_label,
+    estimate_selectivity,
+    route,
+    validate,
+    widened_ef,
+)
 
 NavKind = Literal["bq2", "bq1", "adc", "float32"]
 
@@ -71,6 +81,31 @@ def _normalize(x: jnp.ndarray) -> jnp.ndarray:
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
 
 
+def batch_bucket(n: int, query_batch: int) -> int:
+    """Padded size for a (possibly partial) query batch.
+
+    Tail batches are padded up a small fixed ladder (8, 32, 128, ...,
+    ``query_batch``) instead of tracing ``batched_beam_search`` once per
+    distinct tail size: the trace count is bounded by the ladder length
+    while tiny batches never pay a full ``query_batch`` of padding.
+    """
+    b = 8
+    while b < n and b < query_batch:
+        b *= 4
+    return min(b, query_batch)
+
+
+def pad_rows(arr: jnp.ndarray, size: int) -> jnp.ndarray:
+    """Pad axis 0 to ``size`` rows by repeating the last row (the
+    padded rows run real searches whose outputs are sliced away)."""
+    pad = size - arr.shape[0]
+    if pad <= 0:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.repeat(arr[-1:], pad, axis=0)], axis=0
+    )
+
+
 def random_rotation(dim: int, seed: int) -> jnp.ndarray:
     """Random orthogonal matrix (RaBitQ-style preprocessing; beyond-paper)."""
     key = jax.random.PRNGKey(seed)
@@ -92,6 +127,7 @@ class QuIVerIndex:
     rotation: jnp.ndarray | None = None
     build_stats: BuildStats | None = None
     metric_kind: NavKind = "bq2"
+    labels: LabelStore | None = None     # packed label bitsets — hot
     # backends are constructed once per nav kind and cached: kernel
     # dispatch happens at construction, and beam-search jit caches key on
     # the backend instance, so reusing it avoids re-trace per query batch.
@@ -145,6 +181,29 @@ class QuIVerIndex:
             metric_kind=metric,
         )
 
+    # -- labels (filtered search, DESIGN.md §9) ----------------------------
+
+    def attach_labels(
+        self, labels, *, n_labels: int | None = None
+    ) -> LabelStore:
+        """Attach per-node labels: one int (categorical) or iterable of
+        ints (multi-tag) per node, length N.  Returns the store."""
+        n = self.sigs.words.shape[0]
+        if len(labels) != n:
+            raise ValueError(f"{len(labels)} label rows for {n} nodes")
+        self.labels = LabelStore.from_rows(labels, n_labels=n_labels)
+        return self.labels
+
+    def build_label_entries(self, *, min_count: int = 32) -> int:
+        """Per-label entry points (member medoids) for frequent labels;
+        returns how many were built."""
+        if self.labels is None:
+            raise ValueError("no labels attached")
+        return build_label_entries(
+            self.labels, self.backend(), vectors=self.vectors,
+            min_count=min_count,
+        )
+
     # -- search ------------------------------------------------------------
 
     def search(
@@ -157,11 +216,29 @@ class QuIVerIndex:
         nav: NavKind | None = None,
         expand: int = 1,
         query_batch: int = 256,
+        filter=None,
+        selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR,
     ) -> tuple[np.ndarray, np.ndarray]:
-        """(Q, D) float32 queries -> ((Q, k) ids, (Q, k) cosine scores).
+        """(Q, D) float32 queries -> ((Q, k) ids, (Q, k) scores).
+
+        Score scale: with ``rerank=True`` (and cold vectors present)
+        scores are exact float32 **cosine similarity** in [-1, 1]; with
+        ``rerank=False`` they are **negated navigation distances** on
+        the ``nav`` backend's own scale (e.g. ``sim - 4D`` for ``bq2``)
+        — larger is still better, but the two scales are not comparable
+        (see :func:`rerank`).
 
         ``nav`` defaults to the metric the index was built in; ``expand``
         is the beam expansion width L (one (L*R,) distance batch/hop).
+
+        ``filter`` (optional) is a label predicate — ``repro.filter``'s
+        ``Any``/``All``/``Not`` or a bare label id — evaluated against
+        the attached :class:`LabelStore`.  Estimated selectivity picks
+        the route: above ``selectivity_floor`` the graph is traversed
+        with a widened ``ef`` and the predicate as the beam's
+        ``result_valid`` mask (non-matching nodes route but never
+        surface), starting from the best per-label entry point; below
+        the floor the match set is brute-forced exactly.
         """
         queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
         backend = self.backend(nav)
@@ -174,19 +251,57 @@ class QuIVerIndex:
         reprs = backend.encode_queries(enc_in)
         n = self.sigs.words.shape[0]
 
+        result_valid = None
+        start = jnp.int32(self.medoid)
+        ef_run = ef
+        if filter is not None:
+            if self.labels is None:
+                raise ValueError(
+                    "filtered search needs labels: attach_labels() first"
+                )
+            expr = validate(filter, self.labels.n_labels)
+            count_fn = self.labels.count_fn()
+            sel = estimate_selectivity(expr, count_fn, n)
+            mask = self.labels.mask(expr)
+            if route(sel, selectivity_floor) == "brute":
+                # the popcount estimate is a bound, not a measurement
+                # (Not() of a union bound can underestimate badly);
+                # verify with the exact mask popcount before committing
+                # to materializing the match set
+                match = np.nonzero(np.asarray(mask))[0]
+                sel = len(match) / max(n, 1)
+                if route(sel, selectivity_floor) == "brute":
+                    if rerank and self.vectors is not None:
+                        return brute_force_topk(
+                            queries, match, k, vectors=self.vectors
+                        )
+                    return brute_force_topk(
+                        queries, match, k, vectors=None, backend=backend,
+                        reprs=reprs,
+                    )
+            result_valid = mask
+            ef_run = widened_ef(ef, sel, selectivity_floor, n)
+            lbl = entry_label(expr, count_fn)
+            if lbl is not None and self.labels.entries[lbl] >= 0:
+                start = jnp.int32(int(self.labels.entries[lbl]))
+
         out_ids, out_scores = [], []
         for s in range(0, queries.shape[0], query_batch):
             rep = reprs[s:s + query_batch]
+            q = queries[s:s + query_batch]
+            real = rep.shape[0]
+            bucket = batch_bucket(real, query_batch)
             res = batched_beam_search(
-                rep, self.adjacency, jnp.int32(self.medoid),
-                dist_fn=backend.dist_fn, ef=ef, n=n, expand=expand,
+                pad_rows(rep, bucket), self.adjacency, start,
+                dist_fn=backend.dist_fn, ef=ef_run, n=n, expand=expand,
+                result_valid=result_valid,
             )
             ids, scores = _rerank(
-                res.ids, res.dists, queries[s:s + query_batch],
+                res.ids, res.dists, pad_rows(q, bucket),
                 self.vectors if rerank else None, k,
             )
-            out_ids.append(np.asarray(ids))
-            out_scores.append(np.asarray(scores))
+            out_ids.append(np.asarray(ids[:real]))
+            out_scores.append(np.asarray(scores[:real]))
         return np.concatenate(out_ids), np.concatenate(out_scores)
 
     # -- accounting (paper Table 2) -----------------------------------------
@@ -195,18 +310,26 @@ class QuIVerIndex:
         n = self.sigs.words.shape[0]
         sig_bytes = self.sigs.words.size * 4
         adj_bytes = self.adjacency.size * 4 + n * 4  # + degree counters
+        label_bytes = (
+            self.labels.memory_bytes() if self.labels is not None else 0
+        )
         cold = self.vectors.size * 4 if self.vectors is not None else 0
+        hot = sig_bytes + adj_bytes + label_bytes
         return {
             "hot_signature_bytes": int(sig_bytes),
             "hot_adjacency_bytes": int(adj_bytes),
-            "hot_total_bytes": int(sig_bytes + adj_bytes),
+            "hot_label_bytes": int(label_bytes),
+            "hot_total_bytes": int(hot),
             "cold_vector_bytes": int(cold),
-            "total_bytes": int(sig_bytes + adj_bytes + cold),
+            "total_bytes": int(hot + cold),
         }
 
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str) -> None:
+        label_fields = (
+            self.labels.to_npz_fields() if self.labels is not None else {}
+        )
         np.savez_compressed(
             path,
             words=np.asarray(self.sigs.words),
@@ -222,6 +345,7 @@ class QuIVerIndex:
                 if self.rotation is not None else np.zeros((0,))
             ),
             metric_kind=np.array(self.metric_kind),
+            **label_fields,
             **params_to_npz(self.params),
         )
 
@@ -249,6 +373,7 @@ class QuIVerIndex:
             vectors=jnp.asarray(vectors) if vectors.size else None,
             rotation=jnp.asarray(rotation) if rotation.size else None,
             metric_kind=metric_kind,
+            labels=LabelStore.from_npz(z),
         )
 
 
@@ -272,14 +397,27 @@ def rerank_f32(beam_ids, queries, vectors, k):
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def topk_by_dist(beam_ids, beam_dists, k):
+    """Hot-path-only top-k: scores are **negated navigation distances**
+    (the beam backend's own scale — e.g. ``sim - 4D`` in [-8D, 0] for
+    ``bq2``, negated Hamming for ``bq1``), NOT cosine.  Larger is
+    better, but the scale is not comparable to :func:`rerank_f32`."""
     scores, pos = jax.lax.top_k(-beam_dists, k)
     ids = jnp.take_along_axis(beam_ids, pos, axis=-1)
     return ids, scores
 
 
 def rerank(beam_ids, beam_dists, queries, vectors, k):
-    """Shared rerank entry: float32 cosine when cold vectors exist,
-    else BQ-distance top-k.  Both exclude invalid (-1) beam ids."""
+    """Shared rerank entry — the score-convention boundary.
+
+    With cold ``vectors`` present, candidates are re-scored exactly and
+    the returned scores are **float32 cosine similarity** in [-1, 1]
+    (:func:`rerank_f32`).  With ``vectors=None`` (``rerank=False``
+    searches, vector-free indexes) the beam order is kept and the
+    scores are **negated navigation distances** on the metric backend's
+    own scale (:func:`topk_by_dist`).  Both exclude invalid (-1) beam
+    ids; callers comparing scores across searches must hold the
+    convention fixed — the two scales are not interchangeable.
+    """
     if vectors is None:
         return topk_by_dist(beam_ids, beam_dists, k)
     return rerank_f32(beam_ids, queries, vectors, k)

@@ -1,0 +1,66 @@
+"""Filtered search: predicate-aware BQ navigation (DESIGN.md §9).
+
+Public surface:
+
+* :class:`LabelStore` — packed per-node label bitsets (device-resident
+  hot path) with per-label entry points;
+* :class:`Any` / :class:`All` / :class:`Not` — label predicates,
+  compiled to jitted packed-bitset masks;
+* selectivity routing helpers (``estimate_selectivity``, ``route``,
+  ``widened_ef``, ``brute_force_topk``, ``build_label_entries``).
+
+Every search surface threads a ``filter=`` predicate down to the
+two-mask beam search in ``repro.core.beam``: tombstones keep their
+traverse-but-never-return semantics (``node_valid``) while the
+predicate mask (``result_valid``) restricts what may be *returned*,
+never what may be *traversed* — so filtered search over a mutable index
+composes with deletes for free.
+"""
+
+from repro.filter.labels import (
+    LabelStore,
+    n_label_words,
+    pack_label_rows,
+)
+from repro.filter.predicate import (
+    All,
+    Any,
+    Label,
+    Not,
+    Predicate,
+    as_predicate,
+    entry_label,
+    estimate_selectivity,
+    eval_mask,
+    labels_in,
+    validate,
+)
+from repro.filter.search import (
+    DEFAULT_SELECTIVITY_FLOOR,
+    brute_force_topk,
+    build_label_entries,
+    route,
+    widened_ef,
+)
+
+__all__ = [
+    "All",
+    "Any",
+    "DEFAULT_SELECTIVITY_FLOOR",
+    "Label",
+    "LabelStore",
+    "Not",
+    "Predicate",
+    "as_predicate",
+    "brute_force_topk",
+    "build_label_entries",
+    "entry_label",
+    "estimate_selectivity",
+    "eval_mask",
+    "labels_in",
+    "n_label_words",
+    "pack_label_rows",
+    "route",
+    "validate",
+    "widened_ef",
+]

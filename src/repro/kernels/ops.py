@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import bq
 from repro.kernels.binarize import binarize_pallas

@@ -39,7 +39,6 @@ def binarize_ref(x: jnp.ndarray) -> jnp.ndarray:
 def flash_attention_ref(q, k, v, *, causal=True):
     """(BH, Tq, hd) x (BH, Tk, hd) -> (BH, Tq, hd), naive softmax."""
     import jax
-    import numpy as np
 
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),

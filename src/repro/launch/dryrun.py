@@ -215,15 +215,19 @@ def run_quiver_cell(multi_pod: bool,
     med = jax.ShapeDtypeStruct((n_chips,), jnp.int32)
     vec = jax.ShapeDtypeStruct((n_chips, n_per_shard, dim), jnp.float32)
     liv = jax.ShapeDtypeStruct((n_chips, n_per_shard), jnp.bool_)
+    # filter-predicate result mask (all-True when serving unfiltered):
+    # same shape as the tombstone mask, one per shard
+    rvd = jax.ShapeDtypeStruct((n_chips, n_per_shard), jnp.bool_)
     qw = jax.ShapeDtypeStruct((q, w2), jnp.uint32)
     qf = jax.ShapeDtypeStruct((q, dim), jnp.float32)
     try:
         with mesh:
-            lowered = jax.jit(fn).lower(sig, adj, med, vec, liv, qw, qf)
+            lowered = jax.jit(fn).lower(sig, adj, med, vec, liv, rvd,
+                                        qw, qf)
             t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
             t_compile = time.perf_counter() - t0 - t_lower
-            jcost = trace_cost(fn, sig, adj, med, vec, liv, qw, qf,
+            jcost = trace_cost(fn, sig, adj, med, vec, liv, rvd, qw, qf,
                                while_trip_hint=4 * ef + 128)
     except Exception as e:
         traceback.print_exc()

@@ -15,7 +15,6 @@ KV cache, and cross-attention (Whisper decoder).
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

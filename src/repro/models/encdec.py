@@ -10,7 +10,7 @@ KV (computed once from the encoder output at prefill).
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

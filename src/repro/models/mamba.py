@@ -98,7 +98,6 @@ def mamba(
     return_state: bool = False,
 ):
     """Returns y (B,T,d) and, if requested, (conv_state, ssm_state)."""
-    d_inner = p["conv_w"].shape[-1]
     d_state = p["a_log"].shape[-1]
     dt_rank = p["x_proj"]["w"].shape[-1] - 2 * d_state
 

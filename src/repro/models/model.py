@@ -17,18 +17,14 @@ Batch layouts (see DESIGN.md §4 frontends-as-stubs):
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.dist.sharding import shard
 from repro.models import encdec as encdec_mod
 from repro.models import transformer as tf
-from repro.models.layers import linear
 
 
 class ModelBundle(NamedTuple):

@@ -23,7 +23,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.dist.compat import shard_map
 
-from repro.dist.sharding import active_ctx, param_pspecs, shard
+from repro.dist.sharding import active_ctx, param_pspecs
 from repro.models.layers import silu
 
 

@@ -14,9 +14,6 @@ leading group dimension and threaded through the same scan as xs/ys.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
 from typing import Any
 
 import jax

@@ -16,7 +16,6 @@ feedback so quantization noise is fed back instead of lost.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -93,7 +92,6 @@ def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     aw = jax.lax.all_gather(words, axis_name)        # (N, 2W) uint32
     acw = jax.lax.all_gather(cw, axis_name)
     acs = jax.lax.all_gather(cs, axis_name)
-    n = aw.shape[0]
     decoded = jax.vmap(
         lambda w, a, b: sm2_dequantize(w, a, b, size, shape)
     )(aw, acw, acs)

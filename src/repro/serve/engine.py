@@ -36,6 +36,12 @@ class Retriever:
     ``expand`` is the beam expansion width L (DESIGN.md §4).
     ``pad_token`` fills the context slots of missing hits (search
     returns -1 ids when the beam finds fewer than k live documents).
+
+    ``filter`` (optional) is a label predicate (``repro.filter``):
+    retrieval only surfaces documents matching it — metadata-filtered
+    RAG (language, tenant, source tags), evaluated as packed bitset
+    ops inside the BQ hot path (DESIGN.md §9).  The index needs labels
+    attached (``attach_labels`` / ``insert(labels=...)``).
     """
     index: Any                      # QuIVerIndex | MutableQuIVerIndex
     doc_tokens: np.ndarray          # (n_docs, doc_len) int32
@@ -45,12 +51,16 @@ class Retriever:
     nav: str | None = None
     expand: int = 1
     pad_token: int = 0
+    filter: Any = None              # label predicate (repro.filter)
 
-    def augment(self, tokens: np.ndarray) -> np.ndarray:
+    def augment(
+        self, tokens: np.ndarray, *, filter=None
+    ) -> np.ndarray:
         emb = np.asarray(self.embed_fn(jnp.asarray(tokens)))
         ids, _ = self.index.search(
             jnp.asarray(emb), k=self.k, ef=self.ef, nav=self.nav,
             expand=self.expand,
+            filter=filter if filter is not None else self.filter,
         )
         ids = np.asarray(ids).reshape(len(tokens), -1)
         # ids outside the token store — -1 padding (beam found < k live
@@ -64,13 +74,19 @@ class Retriever:
         return np.concatenate([ctx, tokens], axis=1)
 
     def add_documents(
-        self, doc_tokens: np.ndarray, embeddings: np.ndarray | None = None
+        self,
+        doc_tokens: np.ndarray,
+        embeddings: np.ndarray | None = None,
+        *,
+        labels=None,
     ) -> np.ndarray:
         """Insert documents into a *mutable* index while serving.
 
         Returns the slot ids the index assigned.  The token store is
         slot-addressed: it is grown to the index capacity on first use
         so reclaimed slots (delete + consolidate) overwrite in place.
+        ``labels`` tags the new documents for filtered retrieval (one
+        int / iterable of ints per document).
         """
         if not hasattr(self.index, "insert"):
             raise TypeError(
@@ -82,7 +98,9 @@ class Retriever:
             embeddings = np.asarray(
                 self.embed_fn(jnp.asarray(doc_tokens))
             )
-        ids = np.asarray(self.index.insert(jnp.asarray(embeddings)))
+        ids = np.asarray(
+            self.index.insert(jnp.asarray(embeddings), labels=labels)
+        )
         cap = self.index.capacity
         if len(self.doc_tokens) < cap:
             pad = np.full(

@@ -44,6 +44,8 @@ from repro.core import bq
 from repro.core.beam import batched_beam_search
 from repro.core.index import (
     QuIVerIndex,
+    batch_bucket,
+    pad_rows,
     params_from_npz,
     params_to_npz,
     rerank_f32,
@@ -52,6 +54,17 @@ from repro.core.index import (
 from repro.core.linking import medoid_scan
 from repro.core.metric import MetricArrays, encode_queries_for, make_backend
 from repro.core.vamana import BuildParams
+from repro.filter import (
+    DEFAULT_SELECTIVITY_FLOOR,
+    LabelStore,
+    brute_force_topk,
+    build_label_entries,
+    entry_label,
+    estimate_selectivity,
+    route,
+    validate,
+    widened_ef,
+)
 from repro.stream.consolidate import link_chunk, overflow_rows, repair_rows
 
 _BUCKETS = (16, 64, 256)
@@ -133,12 +146,12 @@ def _overflow_op(words, vectors, adj, deg, live, row_ids, *,
     static_argnames=("kind", "dim", "ef", "n", "expand", "k",
                      "use_rerank"),
 )
-def _search_op(words, vectors, adj, live, medoid, reprs, queries, *,
-               kind, dim, ef, n, expand, k, use_rerank):
+def _search_op(words, vectors, adj, live, result_valid, medoid, reprs,
+               queries, *, kind, dim, ef, n, expand, k, use_rerank):
     backend = _mk_backend(kind, dim, words, vectors)
     res = batched_beam_search(
         reprs, adj, medoid, dist_fn=backend.dist_fn, ef=ef, n=n,
-        expand=expand, node_valid=live,
+        expand=expand, node_valid=live, result_valid=result_valid,
     )
     if use_rerank and vectors is not None:
         return rerank_f32(res.ids, queries, vectors, k)
@@ -193,6 +206,7 @@ class MutableQuIVerIndex:
         metric_kind: str = "bq2",
         keep_vectors: bool = True,
         rotation: jnp.ndarray | None = None,
+        n_labels: int | None = None,
     ):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
@@ -210,6 +224,9 @@ class MutableQuIVerIndex:
         self.vectors = (
             jnp.zeros((capacity, dim), dtype=jnp.float32)
             if keep_vectors else None
+        )
+        self.labels = (
+            LabelStore(capacity, n_labels) if n_labels else None
         )
         self.live = np.zeros((capacity,), dtype=bool)
         self.allocated = np.zeros((capacity,), dtype=bool)
@@ -249,6 +266,8 @@ class MutableQuIVerIndex:
         out.allocated[:n] = True
         out.size = n
         out.medoid = int(index.medoid)
+        if index.labels is not None:
+            out.labels = index.labels.padded_to(capacity)
         return out
 
     @classmethod
@@ -277,6 +296,7 @@ class MutableQuIVerIndex:
         metric: str = "bq2",
         keep_vectors: bool = True,
         rotation: jnp.ndarray | None = None,
+        n_labels: int | None = None,
     ) -> "MutableQuIVerIndex":
         return cls(
             capacity=capacity,
@@ -285,6 +305,30 @@ class MutableQuIVerIndex:
             metric_kind=metric,
             keep_vectors=keep_vectors,
             rotation=rotation,
+            n_labels=n_labels,
+        )
+
+    def enable_labels(self, n_labels: int) -> LabelStore:
+        """Create (or return) the label store for filtered search."""
+        if self.labels is None:
+            self.labels = LabelStore(self.capacity, n_labels)
+        elif self.labels.n_labels != n_labels:
+            raise ValueError(
+                f"labels already enabled with n_labels="
+                f"{self.labels.n_labels}"
+            )
+        return self.labels
+
+    def build_label_entries(self, *, min_count: int = 32) -> int:
+        """Per-label entry points over the *live* member sets."""
+        if self.labels is None:
+            raise ValueError("no labels enabled")
+        backend = _mk_backend(
+            self.metric_kind, self.dim, self.words, self.vectors
+        )
+        return build_label_entries(
+            self.labels, backend, vectors=self.vectors,
+            node_valid=self._live_dev(), min_count=min_count,
         )
 
     # -- introspection -----------------------------------------------------
@@ -308,14 +352,19 @@ class MutableQuIVerIndex:
         sig_bytes = self.words.size * 4
         adj_bytes = self.adjacency.size * 4 + self.deg.size * 4
         mask_bytes = 2 * self.capacity  # live + allocated, host-side
+        label_bytes = (
+            self.labels.memory_bytes() if self.labels is not None else 0
+        )
         cold = self.vectors.size * 4 if self.vectors is not None else 0
+        hot = sig_bytes + adj_bytes + mask_bytes + label_bytes
         return {
             "hot_signature_bytes": int(sig_bytes),
             "hot_adjacency_bytes": int(adj_bytes),
             "hot_mask_bytes": int(mask_bytes),
-            "hot_total_bytes": int(sig_bytes + adj_bytes + mask_bytes),
+            "hot_label_bytes": int(label_bytes),
+            "hot_total_bytes": int(hot),
             "cold_vector_bytes": int(cold),
-            "total_bytes": int(sig_bytes + adj_bytes + mask_bytes + cold),
+            "total_bytes": int(hot + cold),
         }
 
     def _live_dev(self) -> jnp.ndarray:
@@ -338,23 +387,36 @@ class MutableQuIVerIndex:
         self.size += fresh
         return np.asarray(ids, dtype=np.int32)
 
-    def insert(self, vectors: jnp.ndarray) -> np.ndarray:
+    def insert(self, vectors: jnp.ndarray, labels=None) -> np.ndarray:
         """Insert a batch of float32 vectors; returns their slot ids.
 
         Vectors are L2-normalized and binarized, then chunk-linked
         against the live graph: beam search from the medoid, alpha-prune
         in the index's metric space, forward + reverse edge install —
         the shared primitives of ``repro.core.linking``.
+
+        ``labels`` (optional) assigns filter labels on the way in: one
+        int or iterable of ints per vector (or a single int for the
+        whole batch), written into the :class:`LabelStore` before the
+        new nodes become searchable.  Requires ``enable_labels``.
         """
         v = _normalize(jnp.asarray(vectors, dtype=jnp.float32))
         if v.ndim == 1:
             v = v[None]
         if v.shape[-1] != self.dim:
             raise ValueError(f"dim mismatch: {v.shape[-1]} != {self.dim}")
+        if labels is not None and self.labels is None:
+            raise ValueError(
+                "insert(labels=...) needs enable_labels(n_labels) first"
+            )
         if v.shape[0] == 0:
             return np.empty((0,), dtype=np.int32)
         ids = self._allocate(v.shape[0])
         pre_live = self.n_live
+        if labels is not None:
+            self.labels.set(ids, labels)
+        elif self.labels is not None:
+            self.labels.clear(ids)     # reused slots must start clean
 
         enc = v @ self.rotation if self.rotation is not None else v
         sig_words = bq.encode(enc).words
@@ -399,13 +461,18 @@ class MutableQuIVerIndex:
         """Tombstone ``ids``; returns how many were live.
 
         Dead nodes keep routing beam searches until :meth:`consolidate`
-        splices them out and reclaims their slots.
+        splices them out and reclaims their slots.  Their label bits
+        are cleared *now*: popcounts drive selectivity routing, and
+        dead-inflated counts would keep a mostly-deleted label on the
+        graph route long after brute force became the right answer.
         """
         ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
         if len(ids) and (ids.min() < 0 or ids.max() >= self.capacity):
             raise ValueError(f"ids out of range [0, {self.capacity})")
         was_live = self.live[ids].sum()
         self.live[ids] = False
+        if self.labels is not None:
+            self.labels.clear(ids)
         self.stats.deletes += int(was_live)
         self.generation += 1
         return int(was_live)
@@ -475,10 +542,13 @@ class MutableQuIVerIndex:
                 ),
             )
 
-        # clear + reclaim the dead slots
+        # clear + reclaim the dead slots (labels too: a reclaimed slot
+        # must not inherit its previous occupant's filter labels)
         dead_dev = jnp.asarray(dead.astype(np.int32))
         self.adjacency = self.adjacency.at[dead_dev].set(-1)
         self.deg = self.deg.at[dead_dev].set(0)
+        if self.labels is not None:
+            self.labels.clear(dead)
         self.allocated[dead] = False
         self._free.extend(int(i) for i in dead)
 
@@ -509,9 +579,19 @@ class MutableQuIVerIndex:
         nav: str | None = None,
         expand: int = 1,
         query_batch: int = 256,
+        filter=None,
+        selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Tombstone-aware search: same contract as ``QuIVerIndex.search``
-        but dead/never-inserted slots cannot appear in the results."""
+        (including the score scale: cosine with ``rerank=True``, negated
+        navigation distances with ``rerank=False``) but dead or
+        never-inserted slots cannot appear in the results.
+
+        ``filter`` composes with tombstones through the beam's two-mask
+        design: the predicate mask and the live mask each restrict only
+        what may be *returned* while navigation traverses everything —
+        so results are exactly live ∧ matching.
+        """
         queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
         if queries.ndim == 1:
             queries = queries[None]
@@ -526,17 +606,59 @@ class MutableQuIVerIndex:
         reprs = encode_queries_for(kind, enc_in)
         live = self._live_dev()
 
+        result_valid = live          # live & live == live: no-op AND
+        start = jnp.int32(max(self.medoid, 0))
+        ef_run = ef
+        if filter is not None:
+            if self.labels is None:
+                raise ValueError(
+                    "filtered search needs enable_labels() / "
+                    "insert(labels=...) first"
+                )
+            expr = validate(filter, self.labels.n_labels)
+            count_fn = self.labels.count_fn()
+            sel = estimate_selectivity(expr, count_fn, self.n_live)
+            mask = self.labels.mask(expr)
+            if route(sel, selectivity_floor) == "brute":
+                # estimate is a bound — verify against the exact live
+                # match count before materializing the match set
+                match = np.nonzero(np.asarray(mask) & self.live)[0]
+                sel = len(match) / max(self.n_live, 1)
+                if route(sel, selectivity_floor) == "brute":
+                    if rerank and self.vectors is not None:
+                        return brute_force_topk(
+                            queries, match, k, vectors=self.vectors
+                        )
+                    backend = _mk_backend(
+                        kind, self.dim, self.words, self.vectors
+                    )
+                    return brute_force_topk(
+                        queries, match, k, vectors=None, backend=backend,
+                        reprs=reprs,
+                    )
+            result_valid = mask
+            ef_run = widened_ef(ef, sel, selectivity_floor, self.n_live)
+            lbl = entry_label(expr, count_fn)
+            if lbl is not None:
+                ent = int(self.labels.entries[lbl])
+                if ent >= 0 and self.live[ent]:
+                    start = jnp.int32(ent)
+
         out_ids, out_scores = [], []
         for s in range(0, nq, query_batch):
+            rep = reprs[s:s + query_batch]
+            q = queries[s:s + query_batch]
+            real = rep.shape[0]
+            bucket = batch_bucket(real, query_batch)
             ids, scores = _search_op(
                 self.words, self.vectors, self.adjacency, live,
-                jnp.int32(max(self.medoid, 0)),
-                reprs[s:s + query_batch], queries[s:s + query_batch],
-                kind=kind, dim=self.dim, ef=ef, n=self.capacity,
+                result_valid, start,
+                pad_rows(rep, bucket), pad_rows(q, bucket),
+                kind=kind, dim=self.dim, ef=ef_run, n=self.capacity,
                 expand=expand, k=k, use_rerank=rerank,
             )
-            out_ids.append(np.asarray(ids))
-            out_scores.append(np.asarray(scores))
+            out_ids.append(np.asarray(ids[:real]))
+            out_scores.append(np.asarray(scores[:real]))
         return np.concatenate(out_ids), np.concatenate(out_scores)
 
     # -- snapshots ---------------------------------------------------------
@@ -576,14 +698,22 @@ class MutableQuIVerIndex:
             vectors=vectors,
             rotation=self.rotation,
             metric_kind=self.metric_kind,
+            labels=(
+                self.labels.compact(live_idx)
+                if self.labels is not None else None
+            ),
         )
 
     # -- persistence -------------------------------------------------------
 
     def save(self, path: str) -> None:
+        label_fields = (
+            self.labels.to_npz_fields() if self.labels is not None else {}
+        )
         np.savez_compressed(
             path,
             stream_format=np.int64(1),
+            **label_fields,
             words=np.asarray(self.words),
             dim=np.int64(self.dim),
             adjacency=np.asarray(self.adjacency),
@@ -631,6 +761,7 @@ class MutableQuIVerIndex:
             out.vectors = jnp.asarray(vectors)
         out.live = z["live"].astype(bool)
         out.allocated = z["allocated"].astype(bool)
+        out.labels = LabelStore.from_npz(z)
         out._free = [int(i) for i in z["free"]]
         out.size = int(z["size"])
         out.medoid = int(z["medoid"])

@@ -59,14 +59,27 @@ class StreamingShardedIndex:
         params: BuildParams | None = None,
         metric: str = "bq2",
         keep_vectors: bool = True,
+        n_labels: int | None = None,
     ) -> "StreamingShardedIndex":
         return cls([
             MutableQuIVerIndex.empty(
                 dim, capacity_per_shard, params, metric=metric,
-                keep_vectors=keep_vectors,
+                keep_vectors=keep_vectors, n_labels=n_labels,
             )
             for _ in range(n_shards)
         ])
+
+    def enable_labels(self, n_labels: int) -> None:
+        """Enable filtered search on every shard."""
+        for s in self.shards:
+            s.enable_labels(n_labels)
+
+    def build_label_entries(self, *, min_count: int = 32) -> int:
+        """Per-shard per-label entry points; returns total built."""
+        return sum(
+            s.build_label_entries(min_count=min_count)
+            for s in self.shards
+        )
 
     # -- id scheme ---------------------------------------------------------
 
@@ -88,15 +101,25 @@ class StreamingShardedIndex:
 
     # -- mutation ----------------------------------------------------------
 
-    def insert(self, vectors) -> np.ndarray:
+    def insert(self, vectors, labels=None) -> np.ndarray:
         """Round-robin insert; returns global ids in input order.
 
         All-or-nothing: capacity is checked across every target shard
         *before* any shard mutates, so a full shard can never leave the
-        fleet with untracked live vectors."""
+        fleet with untracked live vectors.
+
+        ``labels`` (optional): one int / iterable of ints per vector,
+        routed to each owning shard's label store alongside the vector
+        (see ``MutableQuIVerIndex.insert``)."""
         v = np.asarray(vectors, dtype=np.float32)
         if v.ndim == 1:
             v = v[None]
+        if labels is not None:
+            labels = list(labels)
+            if len(labels) != len(v):
+                raise ValueError(
+                    f"{len(labels)} label rows for {len(v)} vectors"
+                )
         owner = (self._rr + np.arange(len(v))) % self.n_shards
         counts = np.bincount(owner, minlength=self.n_shards)
         for s, need in enumerate(counts):
@@ -113,7 +136,13 @@ class StreamingShardedIndex:
             take = np.nonzero(owner == s)[0]
             if take.size == 0:
                 continue
-            slots = self.shards[s].insert(v[take])
+            slots = self.shards[s].insert(
+                v[take],
+                labels=(
+                    [labels[i] for i in take] if labels is not None
+                    else None
+                ),
+            )
             gids[take] = self._to_global(s, slots)
         return gids
 
@@ -148,6 +177,7 @@ class StreamingShardedIndex:
         gens = tuple(s.generation for s in self.shards)
         if self._snapshot is not None and gens == self._snapshot_gens:
             return self._snapshot
+        labeled = all(s.labels is not None for s in self.shards)
         self._snapshot = ShardedIndex(
             sig_words=jnp.stack([s.words for s in self.shards]),
             adjacency=jnp.stack([s.adjacency for s in self.shards]),
@@ -160,15 +190,37 @@ class StreamingShardedIndex:
             live=jnp.asarray(
                 np.stack([s.live for s in self.shards])
             ),
+            label_words=(
+                jnp.stack([s.labels.words for s in self.shards])
+                if labeled else None
+            ),
+            n_labels=(
+                self.shards[0].labels.n_labels if labeled else 0
+            ),
+            label_entries=(
+                jnp.asarray(
+                    np.stack([s.labels.entries for s in self.shards])
+                )
+                if labeled else None
+            ),
+            # live-accurate fleet popcounts (delete clears label bits)
+            label_counts=(
+                np.sum([s.labels.counts for s in self.shards], axis=0)
+                if labeled else None
+            ),
         )
         self._snapshot_gens = gens
         return self._snapshot
 
     def search(self, queries, *, ef: int = 64, k: int = 10,
                nav: str | None = None, expand: int = 1,
-               mesh=None):
-        """Fan-out/merge search over all shards (global ids)."""
+               mesh=None, filter=None):
+        """Fan-out/merge search over all shards (global ids).
+
+        ``filter`` is pushed down per shard: every shard's label bitset
+        mask joins its tombstone mask in the fan-out, so only live
+        matching ids reach the top-k merge (``search_sharded``)."""
         return search_sharded(
             self.snapshot(), queries, mesh=mesh, ef=ef, k=k,
-            nav=nav, expand=expand,
+            nav=nav, expand=expand, filter=filter,
         )

@@ -19,7 +19,6 @@ roofline table reports the bound and flags memory terms accordingly.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import numpy as np

@@ -20,8 +20,6 @@ ICI (per the assignment's constants).
 
 from __future__ import annotations
 
-import dataclasses
-import json
 import re
 from typing import Any
 

@@ -12,8 +12,7 @@ the optimizer; see ``repro/optim/compress.py``.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

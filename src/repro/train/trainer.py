@@ -22,10 +22,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable
-
 import jax
-import numpy as np
 
 from repro.ckpt import checkpoint
 from repro.train.train_step import TrainConfig, init_train_state, \

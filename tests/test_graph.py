@@ -5,14 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import bq
 from repro.core.baselines import flat_search, recall_at_k
 from repro.core.beam import batched_beam_search, beam_search
 from repro.core.index import QuIVerIndex
-from repro.core.metric import BQ2Backend, Float32Backend
 from repro.core.prune import alpha_prune
-from repro.core.vamana import BuildParams, build_graph
-from repro.data.datasets import contrastive_surrogate, make_dataset
+from repro.core.vamana import BuildParams
+from repro.data.datasets import make_dataset
 
 jax.config.update("jax_platform_name", "cpu")
 

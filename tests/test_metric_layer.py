@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.core import bq, metric
+from repro.core.baselines import flat_search, recall_at_k
 from repro.core.beam import INF, batched_beam_search
 from repro.core.index import QuIVerIndex
 from repro.core.vamana import BuildParams
@@ -274,6 +275,43 @@ def test_beam_expandL_converges_in_fewer_hops(expand):
     # and it must take measurably fewer expansion rounds
     assert float(np.asarray(wide.hops).mean()) < \
         float(np.asarray(greedy.hops).mean())
+
+
+@pytest.mark.parametrize("nav", ["bq2", "bq1", "adc", "float32"])
+def test_rotated_index_search_every_nav_kind(nav):
+    """Rotation x nav-kind coverage: a rotated build must encode
+    queries in rotated space for sig-based navigation (bq2/bq1/adc)
+    but keep the float32 backend unrotated (it holds the unrotated
+    cold vectors) — every kind must stay a working, sane search."""
+    base, queries = make_dataset("minilm-surrogate", n=800, queries=12)
+    base, queries = base[:, :64], queries[:, :64]
+    idx = QuIVerIndex.build(
+        jnp.asarray(base),
+        BuildParams(m=6, ef_construction=48, prune_pool=48, chunk=128),
+        rotate_seed=11,
+    )
+    gt, _ = flat_search(base, queries, k=5)
+    ids, scores = idx.search(jnp.asarray(queries), k=5, ef=48, nav=nav)
+    assert ids.shape == (12, 5)
+    assert (ids >= 0).all() and (ids < 800).all()
+    # reranked scores are cosine regardless of nav kind
+    assert (scores <= 1.0 + 1e-5).all()
+    rec = recall_at_k(ids, gt)
+    # adc/bq1 are ablation navigators; they still must clearly beat
+    # chance, while bq2/float32 should be strong
+    floor = 0.6 if nav in ("bq1", "adc") else 0.8
+    assert rec >= floor, (nav, rec)
+    # query-side rotation really is what makes sig-based navigation
+    # work: rerank=False exposes raw navigation quality, which would
+    # collapse if queries were encoded unrotated
+    ids_raw, raw_scores = idx.search(
+        jnp.asarray(queries), k=5, ef=48, nav=nav, rerank=False
+    )
+    # 1-bit raw navigation is the paper's weak ablation — lowest floor
+    assert recall_at_k(ids_raw, gt) >= (0.3 if nav == "bq1" else 0.4), nav
+    # rerank=False scores are negated navigation distances, not cosine
+    if nav == "bq2":
+        assert (raw_scores <= 0.0).all()
 
 
 def test_index_search_accepts_expand():

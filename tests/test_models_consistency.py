@@ -9,9 +9,7 @@ import pytest
 from repro.configs.base import get_config
 from repro.models import mamba as mamba_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.attention import (
-    attention_forward, flash_attention, make_kv_cache,
-)
+from repro.models.attention import flash_attention
 from repro.models.model import build_model
 
 jax.config.update("jax_platform_name", "cpu")

@@ -1,9 +1,6 @@
 """Substrate tests: optimizer, schedules, compression, checkpointing,
 pipeline determinism, trainer restart + straggler detection."""
 
-import os
-import signal
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +15,6 @@ from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.optim.compress import (
     compress_decompress_tree,
     compression_ratio,
-    init_error_feedback,
     sm2_dequantize,
     sm2_quantize,
 )

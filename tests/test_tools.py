@@ -2,10 +2,9 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.tools.hlo_collectives import parse_collectives
-from repro.tools.jaxpr_cost import jaxpr_cost, trace_cost
+from repro.tools.jaxpr_cost import trace_cost
 
 jax.config.update("jax_platform_name", "cpu")
 
