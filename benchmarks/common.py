@@ -58,9 +58,14 @@ def ground_truth(name: str, k: int = 10):
     return _gt_cache[key]
 
 
-def timed_search(idx, queries, *, ef: int, k: int = 10, nav="bq2",
+def timed_search(idx, queries, *, ef: int, k: int = 10, nav=None,
                  expand: int = 1, repeats: int = 2):
-    """Returns (pred_ids, seconds_per_query)."""
+    """Returns (pred_ids, seconds_per_query).
+
+    ``nav=None`` searches in the index's own metric (and applies its
+    NavPolicy schedule when it was built with ``nav="auto"``); pass a
+    kind explicitly to force a navigation space.
+    """
     q = jnp.asarray(queries)
     pred, _ = idx.search(q, k=k, ef=ef, nav=nav, expand=expand)  # warm
     t0 = time.perf_counter()
@@ -81,3 +86,30 @@ def emit(rows: list[dict], table: str):
             if k not in ("name", "us_per_call")
         )
         print(f"{r['name']},{us},{derived}")
+
+
+def write_bench_json(rows: list[dict], table: str) -> str:
+    """Record the suite's results as ``BENCH_<table>.json`` at the repo
+    root — the machine-readable perf-trajectory artifact (one file per
+    suite, overwritten per run; the git history is the trajectory).
+
+    Each row keeps whatever the suite measured (recall/memory/...);
+    ``qps`` is derived from ``us_per_call`` where present.
+    """
+    out_rows = []
+    for r in rows:
+        row = dict(r)
+        us = row.get("us_per_call")
+        if us:
+            row["qps"] = round(1e6 / us, 1)
+        out_rows.append(row)
+    payload = {
+        "table": table,
+        "bench_n": BENCH_N,
+        "bench_q": BENCH_Q,
+        "generated_unix": round(time.time(), 1),
+        "rows": out_rows,
+    }
+    path = OUT_DIR.parents[1] / f"BENCH_{table}.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return str(path)

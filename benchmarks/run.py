@@ -2,10 +2,12 @@
 
     PYTHONPATH=src python -m benchmarks.run [table5 table7 ...]
 
-Prints ``name,us_per_call,derived`` CSV rows (the harness contract) and
-writes JSON artifacts to experiments/bench/.  Scale via REPRO_BENCH_N
-(default 10k vectors; the paper uses 1M — constants scale, orderings
-don't).
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract),
+writes JSON artifacts to experiments/bench/, and records each suite as
+a machine-readable ``BENCH_<name>.json`` at the repo root (the perf
+trajectory: recall/QPS/memory per config, one artifact per suite).
+Scale via REPRO_BENCH_N (default 10k vectors; the paper uses 1M —
+constants scale, orderings don't).
 """
 
 from __future__ import annotations
@@ -25,19 +27,20 @@ from benchmarks import (
     table6_baselines,
     table7_boundary,
 )
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 
 TABLES = {
-    "kernel_bench": kernel_bench,
-    "table2": table2_memory,
-    "table5": table5_recall_qps,
-    "table6": table6_baselines,
-    "table7": table7_boundary,
-    "ablation_adc": ablation_adc,
-    "ablation_bits": ablation_bits,
-    "construction": construction,
-    "streaming": streaming,
-    "filtered": filtered,
+    "kernel_bench": kernel_bench.run,
+    "table2": table2_memory.run,
+    "table5": table5_recall_qps.run,
+    "table6": table6_baselines.run,
+    "table7": table7_boundary.run,
+    "boundary": table7_boundary.run_boundary,
+    "ablation_adc": ablation_adc.run,
+    "ablation_bits": ablation_bits.run,
+    "construction": construction.run,
+    "streaming": streaming.run,
+    "filtered": filtered.run,
 }
 
 
@@ -46,10 +49,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in names:
         t0 = time.perf_counter()
-        rows = TABLES[name].run()
+        rows = TABLES[name]()
         emit(rows, name)
-        print(f"# {name} done in {time.perf_counter()-t0:.0f}s",
-              file=sys.stderr)
+        path = write_bench_json(rows, name)
+        print(f"# {name} done in {time.perf_counter()-t0:.0f}s "
+              f"-> {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,23 @@
 """Paper Table 7 / Fig 3: the applicability boundary across nine
-distribution tiers.
+distribution tiers — now with the probe's *prediction* next to the
+measured recall, so the boundary criterion is directly falsifiable
+from one run (``run``), plus the auto-selection demonstration
+(``run_boundary``, registered as the ``boundary`` suite).
 
 Claims to validate: four-tier gradient (contrastive SOTA > multimodal
 CLIP > cosine-native non-contrastive ~ low-rank synthetic > Euclidean-
 native/random collapse), Finding 2 (recall monotone in ef everywhere),
 Finding 4 (Synthetic-LR sits strictly between Random-Sphere and the
-contrastive tier with everything else held fixed).
+contrastive tier with everything else held fixed) — and, beyond the
+paper, that the training-free probe *predicts* each tier's verdict and
+that ``nav="auto"`` turns the red tiers from a collapse into a served
+workload (DESIGN.md §10).
 """
 
 from __future__ import annotations
 
 from repro.core.baselines import recall_at_k
+from repro.probe import probe_corpus
 
 from benchmarks.common import (
     dataset, emit, ground_truth, index_for, timed_search,
@@ -22,13 +29,18 @@ DATASETS = [
     "cohere-surrogate", "dbpedia-surrogate",
 ]
 
+# the auto-selection demonstration: one corpus per side of the boundary
+# (cosine-native contrastive vs Euclidean-native CV vs isotropic)
+BOUNDARY_DATASETS = ["minilm-surrogate", "sift-like", "random-sphere"]
+
 
 def run() -> list[dict]:
     rows = []
     for name in DATASETS:
         idx, build_s = index_for(name)
-        _, queries = dataset(name)
+        base, queries = dataset(name)
         gt = ground_truth(name)
+        report = probe_corpus(base, seed=0)
         r_by_ef = {}
         for ef in (64, 256):
             pred, spq = timed_search(idx, queries, ef=ef)
@@ -40,9 +52,48 @@ def run() -> list[dict]:
             "recall_ef256": round(r_by_ef[256], 4),
             "monotone": r_by_ef[256] >= r_by_ef[64] - 0.02,
             "build_s": round(build_s, 1),
+            # probe prediction vs measurement: red must line up with
+            # the collapse tiers, green with the contrastive tiers
+            "probe_verdict": report.verdict,
+            "probe_agreement": round(report.bq_agreement, 4),
+            "probe_sign_entropy": round(report.sign_entropy, 4),
+            "probe_cos_std": round(report.cos_std, 4),
+        })
+    return rows
+
+
+def run_boundary() -> list[dict]:
+    """Auto-selection across the boundary: for each side, the probe
+    verdict, the nav kind ``nav="auto"`` picked, recall/QPS/memory
+    under the auto policy, and the same corpus forced onto bq2
+    navigation — the paper's collapse, now routed around."""
+    rows = []
+    for name in BOUNDARY_DATASETS:
+        base, queries = dataset(name)
+        gt = ground_truth(name)
+        auto_idx, build_s = index_for(name, metric="auto")
+        forced_idx, _ = index_for(name)          # plain bq2 build
+        pred_auto, spq_auto = timed_search(auto_idx, queries, ef=64)
+        pred_bq2, spq_bq2 = timed_search(forced_idx, queries, ef=64)
+        mem = auto_idx.memory_breakdown()
+        report = auto_idx.report
+        rows.append({
+            "name": f"boundary/{name}",
+            "us_per_call": round(spq_auto * 1e6, 1),
+            "probe_verdict": report.verdict,
+            "probe_agreement": round(report.bq_agreement, 4),
+            "selected_nav": auto_idx.metric_kind,
+            "nav_policy": auto_idx.policy.describe(),
+            "recall_auto": round(recall_at_k(pred_auto, gt), 4),
+            "recall_forced_bq2": round(recall_at_k(pred_bq2, gt), 4),
+            "us_per_call_bq2": round(spq_bq2 * 1e6, 1),
+            "hot_bytes": mem["hot_total_bytes"],
+            "total_bytes": mem["total_bytes"],
+            "build_s": round(build_s, 1),
         })
     return rows
 
 
 if __name__ == "__main__":
     emit(run(), "table7")
+    emit(run_boundary(), "boundary")

@@ -18,15 +18,22 @@ def main():
     base, queries = make_dataset("cohere-surrogate", n=5000, queries=50)
     print(f"base {base.shape}, queries {queries.shape}")
 
-    # 2. build — everything happens in 2-bit Sign-Magnitude space
+    # 2. build with nav="auto": the training-free applicability probe
+    # (DESIGN.md §10) checks the corpus is BQ-compatible and picks the
+    # navigation ladder rung — bq2 here (contrastive-style data); an
+    # incompatible corpus would route to adc/float32 instead of
+    # silently collapsing.
     t0 = time.perf_counter()
     index = QuIVerIndex.build(
         jnp.asarray(base),
         BuildParams(m=16, ef_construction=96, prune_pool=96, chunk=256),
+        nav="auto",
     )
     print(f"built in {time.perf_counter()-t0:.1f}s "
           f"({index.build_stats.chunks} chunks, "
           f"mean {index.build_stats.mean_hops:.1f} hops/insert)")
+    print(f"probe: {index.report.summary()}")
+    print(f"policy: {index.policy.describe()}")
 
     # 3. hot/cold memory split (paper Table 2)
     mem = index.memory_breakdown()

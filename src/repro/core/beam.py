@@ -41,11 +41,94 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 INF = jnp.float32(3.0e38)
 
 # dist_fn(query_repr, ids (k,), valid (k,) bool) -> (k,) float32
 DistFn = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def batch_bucket(n: int, query_batch: int) -> int:
+    """Padded size for a (possibly partial) query batch.
+
+    Tail batches are padded up a small fixed ladder (8, 32, 128, ...,
+    ``query_batch``) instead of tracing :func:`batched_beam_search` once
+    per distinct tail size: the trace count is bounded by the ladder
+    length while tiny batches never pay a full ``query_batch`` of
+    padding.  The one owner of the ladder — every search surface
+    (core, streaming, filtered, adaptive escalation) pads through it.
+    """
+    b = 8
+    while b < n and b < query_batch:
+        b *= 4
+    return min(b, query_batch)
+
+
+def pad_rows(arr: jnp.ndarray, size: int) -> jnp.ndarray:
+    """Pad axis 0 to ``size`` rows by repeating the last row (the
+    padded rows run real searches whose outputs are sliced away)."""
+    pad = size - arr.shape[0]
+    if pad <= 0:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.repeat(arr[-1:], pad, axis=0)], axis=0
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "neutral"))
+def beam_margin(dists, k: int, neutral: float) -> jnp.ndarray:
+    """Per-query top-k score margin of a beam result.
+
+    ``dists`` is the ``(Q, ef)`` sorted (ascending, INF-padded) distance
+    list of a :class:`BeamResult`; ``neutral`` is the navigation
+    metric's zero-similarity distance (``MetricSpace.neutral_dist`` —
+    e.g. ``4D`` for bq2, ``1.0`` for float32 cosine).  The margin is
+    the k-th candidate's normalized score margin over that floor:
+
+        margin = (neutral - d[k-1]) / neutral
+
+    A query whose top candidates all score near the indifference point
+    has *tight* margins — the quantized metric barely distinguishes its
+    rerank pool from arbitrary points, which is the dominant per-query
+    failure mode (margin-vs-recall correlation ~-0.9 on the amber-tier
+    surrogates, DESIGN.md §10) — and its rerank pool should widen.
+    Beams that found fewer than ``k`` valid candidates report -1
+    (starved: escalation is the only way to fill the pool).  The
+    escalation threshold is corpus-dependent; ``build(nav="auto")``
+    calibrates it from the probe sample
+    (``CompatibilityReport.margin_p30``).
+    """
+    dk = dists[..., k - 1]
+    margin = (neutral - dk) / neutral
+    return jnp.where(dk < INF / 2, margin, -1.0)
+
+
+def escalated_search(run, reprs, queries, ef: int, *,
+                     adaptive: bool, margin_thr: float, mult: int):
+    """The adaptive-escalation driver shared by every search surface
+    (one owner — ``QuIVerIndex.search`` and ``MutableQuIVerIndex.search``
+    both delegate here; DESIGN.md §10).
+
+    ``run(reprs, queries, ef, want_margin) -> (ids, scores, margins)``
+    is the surface's batched base search (margins may be None when
+    ``want_margin`` is False).  With ``adaptive``, queries whose
+    :func:`beam_margin` falls below ``margin_thr`` re-run once with an
+    ``mult``-times wider beam — widening the rerank candidate pool
+    exactly for the tight-margin tail — and their rows are spliced
+    back in place.
+    """
+    all_ids, all_scores, margins = run(reprs, queries, ef, adaptive)
+    if adaptive and margins is not None:
+        esc = np.nonzero(margins < margin_thr)[0]
+        if esc.size:
+            take = jnp.asarray(esc.astype(np.int32))
+            esc_ids, esc_scores, _ = run(
+                reprs[take], queries[take], ef * mult, False
+            )
+            all_ids[esc] = esc_ids
+            all_scores[esc] = esc_scores
+    return all_ids, all_scores
 
 
 class BeamResult(NamedTuple):

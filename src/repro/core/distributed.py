@@ -51,6 +51,13 @@ from repro.filter import (
     validate,
     widened_ef,
 )
+from repro.probe import (
+    CompatibilityReport,
+    NavPolicy,
+    merge_reports,
+    probe_corpus,
+    select_policy,
+)
 
 
 class ShardedIndex(NamedTuple):
@@ -78,6 +85,10 @@ class ShardedIndex(NamedTuple):
     n_labels: int = 0
     label_entries: jnp.ndarray | None = None  # (S, n_labels) int32, -1
     label_counts: np.ndarray | None = None    # (n_labels,) fleet-wide
+    # applicability boundary (DESIGN.md §10): the fleet-wide merged
+    # probe report and the nav policy every shard was built under
+    policy: NavPolicy | None = None
+    report: CompatibilityReport | None = None
 
 
 def build_sharded(vectors: np.ndarray, n_shards: int,
@@ -101,6 +112,12 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
     ``search_sharded(filter=...)`` predicate pushdown.  Padding fill
     rows inherit the repeated vectors' labels but stay masked by
     ``live``, so they never surface.
+
+    ``metric="auto"`` runs the applicability probe per shard slice,
+    merges the shard reports fleet-wide (``repro.probe.merge_reports``)
+    and builds every shard under the single policy the *merged* verdict
+    selects — one serving schedule for the whole fleet, chosen from
+    evidence pooled across all partitions.
     """
     params = params or BuildParams()
     n = len(vectors)
@@ -111,6 +128,17 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
         arr = np.concatenate([arr, arr[:pad]], axis=0)
     parts = arr.reshape(n_shards, per, arr.shape[-1])
     live = (np.arange(n_shards * per) < n).reshape(n_shards, per)
+    policy = report = None
+    if metric == "auto":
+        # per-shard probes (each host probes only its own slice; the
+        # last shard's pad fill repeats leading vectors — a < 1-shard
+        # bias on fleet statistics, same as the label popcounts below)
+        shard_reports = [
+            probe_corpus(parts[s], seed=s) for s in range(n_shards)
+        ]
+        report = merge_reports(shard_reports)
+        policy = select_policy(report)
+        metric = policy.nav
     label_parts = None
     if labels is not None:
         if len(labels) != n:
@@ -154,6 +182,8 @@ def build_sharded(vectors: np.ndarray, n_shards: int,
         # fleet-wide popcounts for selectivity routing (pad fill rows
         # inflate these by < 1 shard's worth — estimates, not truth)
         label_counts=np.sum(lcounts, axis=0) if lcounts else None,
+        policy=policy,
+        report=report,
     )
 
 
@@ -268,7 +298,17 @@ def search_sharded(index: ShardedIndex, queries: np.ndarray, *,
     merge — the collective stays one (k ids, k scores) pair per shard.
     (There is no per-shard brute-force route: a shard's match set is
     already 1/S of the corpus, and the masked merge is exact.)
+
+    An auto-built fleet (``build_sharded(metric="auto")``) applies its
+    :class:`NavPolicy` ef/rerank schedule when ``nav`` is left default.
+    Per-query adaptive escalation is a single-index feature: at fleet
+    scale the static ``ef_scale`` rides the one fan-out collective,
+    while a second escalated collective per tight query would double
+    the serving critical path (DESIGN.md §10).
     """
+    sched = index.policy if nav is None else None
+    if sched is not None:
+        ef = ef * sched.ef_scale
     nav = nav or index.metric
     if mesh is None:
         n_dev = index.sig_words.shape[0]

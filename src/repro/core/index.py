@@ -25,7 +25,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bq
-from repro.core.beam import batched_beam_search
+from repro.core.beam import (
+    batch_bucket,
+    batched_beam_search,
+    beam_margin,
+    escalated_search,
+    pad_rows,
+)
 from repro.core.metric import MetricArrays, MetricSpace, make_backend
 from repro.core.vamana import BuildParams, BuildStats, build_graph
 from repro.filter import (
@@ -38,6 +44,13 @@ from repro.filter import (
     route,
     validate,
     widened_ef,
+)
+from repro.probe import (
+    CompatibilityReport,
+    NavPolicy,
+    probe_corpus,
+    resolve_schedule,
+    select_policy,
 )
 
 NavKind = Literal["bq2", "bq1", "adc", "float32"]
@@ -81,31 +94,6 @@ def _normalize(x: jnp.ndarray) -> jnp.ndarray:
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
 
 
-def batch_bucket(n: int, query_batch: int) -> int:
-    """Padded size for a (possibly partial) query batch.
-
-    Tail batches are padded up a small fixed ladder (8, 32, 128, ...,
-    ``query_batch``) instead of tracing ``batched_beam_search`` once per
-    distinct tail size: the trace count is bounded by the ladder length
-    while tiny batches never pay a full ``query_batch`` of padding.
-    """
-    b = 8
-    while b < n and b < query_batch:
-        b *= 4
-    return min(b, query_batch)
-
-
-def pad_rows(arr: jnp.ndarray, size: int) -> jnp.ndarray:
-    """Pad axis 0 to ``size`` rows by repeating the last row (the
-    padded rows run real searches whose outputs are sliced away)."""
-    pad = size - arr.shape[0]
-    if pad <= 0:
-        return arr
-    return jnp.concatenate(
-        [arr, jnp.repeat(arr[-1:], pad, axis=0)], axis=0
-    )
-
-
 def random_rotation(dim: int, seed: int) -> jnp.ndarray:
     """Random orthogonal matrix (RaBitQ-style preprocessing; beyond-paper)."""
     key = jax.random.PRNGKey(seed)
@@ -128,6 +116,11 @@ class QuIVerIndex:
     build_stats: BuildStats | None = None
     metric_kind: NavKind = "bq2"
     labels: LabelStore | None = None     # packed label bitsets — hot
+    # applicability-boundary state (repro.probe, DESIGN.md §10): the
+    # probe report and nav policy chosen by ``build(nav="auto")``; both
+    # persist through save/load so a loaded index keeps its schedule.
+    policy: NavPolicy | None = None
+    report: CompatibilityReport | None = None
     # backends are constructed once per nav kind and cached: kernel
     # dispatch happens at construction, and beam-search jit caches key on
     # the backend instance, so reusing it avoids re-trace per query batch.
@@ -152,11 +145,28 @@ class QuIVerIndex:
         vectors: jnp.ndarray,
         params: BuildParams | None = None,
         *,
-        metric: NavKind = "bq2",
+        metric: NavKind | Literal["auto"] = "bq2",
+        nav: NavKind | Literal["auto"] | None = None,
+        probe_sample: int = 1024,
+        probe_seed: int = 0,
         rotate_seed: int | None = None,
         keep_vectors: bool = True,
         verbose: bool = False,
     ) -> "QuIVerIndex":
+        """Build the index; ``metric`` (alias ``nav``) picks the space.
+
+        ``metric="auto"`` runs the training-free applicability probe
+        (``repro.probe``, DESIGN.md §10) on a ``probe_sample``-row
+        slice and selects the nav ladder rung + ef/rerank schedule
+        from the verdict: green -> ``bq2``, amber -> ``bq2`` with
+        adaptive escalation, red -> ``float32`` (or ``adc`` without
+        cold vectors) — so incompatible corpora route around the BQ
+        collapse instead of silently serving <15% recall.  The chosen
+        :class:`NavPolicy` and :class:`CompatibilityReport` ride the
+        index through save/load and drive ``search`` defaults.
+        """
+        if nav is not None:
+            metric = nav
         params = params or BuildParams()
         assert params.prune_pool <= params.ef_construction
         vectors = _normalize(jnp.asarray(vectors, dtype=jnp.float32))
@@ -165,6 +175,19 @@ class QuIVerIndex:
         if rotate_seed is not None:
             rotation = random_rotation(vectors.shape[-1], rotate_seed)
             encoded = vectors @ rotation
+        policy = report = None
+        if metric == "auto":
+            # probe the encoding the index will actually serve: the
+            # bit-plane statistics and BQ agreement are properties of
+            # the (possibly rotated) signatures, not the raw vectors
+            # (cosine moments are rotation-invariant either way)
+            report = probe_corpus(
+                encoded, sample=probe_sample, seed=probe_seed
+            )
+            policy = select_policy(report, have_vectors=keep_vectors)
+            metric = policy.nav
+            if verbose:
+                print(f"[probe] {report.summary()} -> {policy.describe()}")
         sigs = bq.encode(encoded)
         backend = make_backend(
             metric, MetricArrays(sigs=sigs, vectors=vectors)
@@ -179,6 +202,8 @@ class QuIVerIndex:
             rotation=rotation,
             build_stats=stats,
             metric_kind=metric,
+            policy=policy,
+            report=report,
         )
 
     # -- labels (filtered search, DESIGN.md §9) ----------------------------
@@ -218,6 +243,7 @@ class QuIVerIndex:
         query_batch: int = 256,
         filter=None,
         selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR,
+        adaptive: bool | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """(Q, D) float32 queries -> ((Q, k) ids, (Q, k) scores).
 
@@ -231,6 +257,17 @@ class QuIVerIndex:
         ``nav`` defaults to the metric the index was built in; ``expand``
         is the beam expansion width L (one (L*R,) distance batch/hop).
 
+        An auto-built index (``build(nav="auto")``) applies its
+        :class:`NavPolicy` schedule when ``nav`` is left default: ``ef``
+        is multiplied by ``policy.ef_scale``, and ``adaptive`` defaults
+        to the policy's setting.  ``adaptive=True`` enables per-query
+        escalation (DESIGN.md §10): queries whose top-k navigation
+        margins are tight (:func:`repro.core.beam.beam_margin` below
+        the policy's ``escalate_margin`` — the quantized scores cannot
+        separate the rerank pool boundary) re-run with an
+        ``escalate_mult``-times wider beam, widening the rerank
+        candidate pool exactly where it is needed.
+
         ``filter`` (optional) is a label predicate — ``repro.filter``'s
         ``Any``/``All``/``Not`` or a bare label id — evaluated against
         the attached :class:`LabelStore`.  Estimated selectivity picks
@@ -238,10 +275,14 @@ class QuIVerIndex:
         with a widened ``ef`` and the predicate as the beam's
         ``result_valid`` mask (non-matching nodes route but never
         surface), starting from the best per-label entry point; below
-        the floor the match set is brute-forced exactly.
+        the floor the match set is brute-forced exactly.  Adaptive
+        escalation composes with the graph route (the escalated pass
+        keeps the predicate mask); the brute route is already exact.
         """
         queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
         backend = self.backend(nav)
+        ef, adaptive, sched = resolve_schedule(self.policy, nav, ef,
+                                               adaptive)
         # signatures were encoded from rotated vectors, so sig-based
         # backends need rotated queries; the float32 backend holds the
         # unrotated cold vectors and must see the queries unrotated too.
@@ -285,28 +326,39 @@ class QuIVerIndex:
             if lbl is not None and self.labels.entries[lbl] >= 0:
                 start = jnp.int32(int(self.labels.entries[lbl]))
 
-        out_ids, out_scores = [], []
-        for s in range(0, queries.shape[0], query_batch):
-            rep = reprs[s:s + query_batch]
-            q = queries[s:s + query_batch]
-            real = rep.shape[0]
-            bucket = batch_bucket(real, query_batch)
-            res = batched_beam_search(
-                pad_rows(rep, bucket), self.adjacency, start,
-                dist_fn=backend.dist_fn, ef=ef_run, n=n, expand=expand,
-                result_valid=result_valid,
-            )
-            ids, scores = _rerank(
-                res.ids, res.dists, pad_rows(q, bucket),
-                self.vectors if rerank else None, k,
-            )
-            out_ids.append(np.asarray(ids[:real]))
-            out_scores.append(np.asarray(scores[:real]))
-        return np.concatenate(out_ids), np.concatenate(out_scores)
+        def run(reprs_r, queries_r, ef_r, want_margin):
+            out_ids, out_scores, out_margin = [], [], []
+            for s in range(0, reprs_r.shape[0], query_batch):
+                rep = reprs_r[s:s + query_batch]
+                q = queries_r[s:s + query_batch]
+                real = rep.shape[0]
+                bucket = batch_bucket(real, query_batch)
+                res = batched_beam_search(
+                    pad_rows(rep, bucket), self.adjacency, start,
+                    dist_fn=backend.dist_fn, ef=ef_r, n=n, expand=expand,
+                    result_valid=result_valid,
+                )
+                ids, scores = _rerank(
+                    res.ids, res.dists, pad_rows(q, bucket),
+                    self.vectors if rerank else None, k,
+                )
+                out_ids.append(np.asarray(ids[:real]))
+                out_scores.append(np.asarray(scores[:real]))
+                if want_margin:
+                    out_margin.append(np.asarray(beam_margin(
+                        res.dists, k, backend.neutral_dist
+                    )[:real]))
+            return (np.concatenate(out_ids), np.concatenate(out_scores),
+                    np.concatenate(out_margin) if want_margin else None)
+
+        return escalated_search(
+            run, reprs, queries, ef_run, adaptive=adaptive,
+            margin_thr=sched.escalate_margin, mult=sched.escalate_mult,
+        )
 
     # -- accounting (paper Table 2) -----------------------------------------
 
-    def memory_breakdown(self) -> dict[str, int]:
+    def memory_breakdown(self) -> dict:
         n = self.sigs.words.shape[0]
         sig_bytes = self.sigs.words.size * 4
         adj_bytes = self.adjacency.size * 4 + n * 4  # + degree counters
@@ -315,7 +367,7 @@ class QuIVerIndex:
         )
         cold = self.vectors.size * 4 if self.vectors is not None else 0
         hot = sig_bytes + adj_bytes + label_bytes
-        return {
+        out = {
             "hot_signature_bytes": int(sig_bytes),
             "hot_adjacency_bytes": int(adj_bytes),
             "hot_label_bytes": int(label_bytes),
@@ -323,6 +375,15 @@ class QuIVerIndex:
             "cold_vector_bytes": int(cold),
             "total_bytes": int(hot + cold),
         }
+        if self.policy is not None:
+            # auto-built indexes report the serving policy next to the
+            # bytes it costs: a red-zone float32 ladder means the "cold"
+            # tier is actually on the hot path
+            out["nav_policy"] = self.policy.describe()
+            out["probe_verdict"] = (
+                self.report.verdict if self.report is not None else "n/a"
+            )
+        return out
 
     # -- persistence ---------------------------------------------------------
 
@@ -330,6 +391,11 @@ class QuIVerIndex:
         label_fields = (
             self.labels.to_npz_fields() if self.labels is not None else {}
         )
+        probe_fields = {}
+        if self.policy is not None:
+            probe_fields.update(self.policy.to_npz_fields())
+        if self.report is not None:
+            probe_fields.update(self.report.to_npz_fields())
         np.savez_compressed(
             path,
             words=np.asarray(self.sigs.words),
@@ -346,6 +412,7 @@ class QuIVerIndex:
             ),
             metric_kind=np.array(self.metric_kind),
             **label_fields,
+            **probe_fields,
             **params_to_npz(self.params),
         )
 
@@ -374,6 +441,8 @@ class QuIVerIndex:
             rotation=jnp.asarray(rotation) if rotation.size else None,
             metric_kind=metric_kind,
             labels=LabelStore.from_npz(z),
+            policy=NavPolicy.from_npz(z),
+            report=CompatibilityReport.from_npz(z),
         )
 
 

@@ -59,6 +59,7 @@ class MetricSpace(Protocol):
 
     kind: str
     n: int
+    neutral_dist: float   # zero-similarity distance (beam_margin scale)
 
     def query_repr(self, ids: jnp.ndarray) -> jnp.ndarray:
         """Representation handed to beam search for these node ids."""
@@ -143,6 +144,8 @@ class BQ2Backend:
         self.dim = sigs.dim
         self._ops = dispatch.bq2_ops(sigs.dim, route=route)
         self._offset = jnp.float32(4 * sigs.dim)
+        # an orthogonal pair scores similarity ~0 -> distance ~offset
+        self.neutral_dist = float(4 * sigs.dim)
 
     @classmethod
     def from_arrays(cls, arrays: MetricArrays, *, route: str | None = None):
@@ -185,6 +188,8 @@ class BQ1Backend:
         self.n = sigs.words.shape[0]
         self.dim = sigs.dim
         self._ops = dispatch.bq1_ops(sigs.dim, route=route)
+        # expected Hamming distance of independent sign planes
+        self.neutral_dist = float(sigs.dim) / 2.0
 
     @classmethod
     def from_arrays(cls, arrays: MetricArrays, *, route: str | None = None):
@@ -226,6 +231,7 @@ class Float32Backend:
         self.vectors = _unit(vectors)
         self.n = vectors.shape[0]
         self.dim = vectors.shape[-1]
+        self.neutral_dist = 1.0          # cos 0 -> distance 1
 
     @classmethod
     def from_arrays(cls, arrays: MetricArrays, *, route: str | None = None):
@@ -274,6 +280,7 @@ class ADCBackend:
         # non-negative calibration: |<q, levels>| <= ||levels|| <= 2*sqrt(D)
         # for unit q; the offset keeps the alpha-criterion well-defined.
         self._offset = 2.0 * jnp.sqrt(jnp.float32(sigs.dim))
+        self.neutral_dist = float(self._offset)   # zero inner product
 
     @classmethod
     def from_arrays(cls, arrays: MetricArrays, *, route: str | None = None):

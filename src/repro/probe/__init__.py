@@ -1,0 +1,58 @@
+"""Applicability-boundary probe (DESIGN.md §10).
+
+Training-free compatibility diagnostics, auto metric selection, and the
+adaptive-rerank schedule — the paper's Table-7 boundary as a runtime
+component:
+
+* :func:`probe_corpus` / :func:`probe_signatures` — jitted, sampled
+  statistics -> :class:`CompatibilityReport` (green/amber/red);
+* :func:`select_policy` -> :class:`NavPolicy` — the bq2 → adc → float32
+  ladder plus ef/rerank-depth schedule behind ``build(nav="auto")``;
+* :class:`ProbeAccumulator` — exact live-set bit statistics maintained
+  incrementally under streaming churn;
+* :func:`merge_reports` — fleet-wide report from per-shard reports.
+"""
+
+from repro.probe.diagnostics import (
+    DEFAULT_K,
+    DEFAULT_QUERIES,
+    DEFAULT_SAMPLE,
+    binary_entropy,
+    entropy_from_counts,
+    probe_corpus,
+    probe_signatures,
+)
+from repro.probe.incremental import ProbeAccumulator
+from repro.probe.policy import (
+    NAV_LADDER,
+    NavPolicy,
+    resolve_schedule,
+    select_policy,
+)
+from repro.probe.report import (
+    DEFAULT_THRESHOLDS,
+    VERDICTS,
+    CompatibilityReport,
+    Thresholds,
+    merge_reports,
+)
+
+__all__ = [
+    "CompatibilityReport",
+    "DEFAULT_K",
+    "DEFAULT_QUERIES",
+    "DEFAULT_SAMPLE",
+    "DEFAULT_THRESHOLDS",
+    "NAV_LADDER",
+    "NavPolicy",
+    "ProbeAccumulator",
+    "Thresholds",
+    "VERDICTS",
+    "binary_entropy",
+    "entropy_from_counts",
+    "merge_reports",
+    "probe_corpus",
+    "probe_signatures",
+    "resolve_schedule",
+    "select_policy",
+]

@@ -1,0 +1,258 @@
+"""Sample-based, training-free probe statistics (DESIGN.md §10).
+
+Everything here is computed from a corpus slice — no training, no
+codebooks, no labels.  The numeric cores are jitted; the host side only
+draws the deterministic sample (``np.random.default_rng(seed)``) and
+boxes the scalars into a :class:`~repro.probe.report.CompatibilityReport`.
+
+Two entry points:
+
+* :func:`probe_corpus`     — float32 vectors available (build time, the
+  common case): full report including the falsifiable BQ-vs-float32
+  top-k agreement.
+* :func:`probe_signatures` — packed signatures only (vector-free
+  indexes): bit-plane statistics, agreement = NaN, verdict capped at
+  amber.
+
+The per-dimension entropy math is shared with the streaming
+:class:`~repro.probe.incremental.ProbeAccumulator` through
+:func:`entropy_from_counts` — one owner for the formula, so the
+incremental statistics are bit-for-bit consistent with a from-scratch
+recompute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bq
+from repro.probe.report import (
+    DEFAULT_THRESHOLDS,
+    CompatibilityReport,
+    Thresholds,
+)
+
+DEFAULT_SAMPLE = 1024
+DEFAULT_QUERIES = 64
+DEFAULT_K = 10
+
+
+def _unit(x: jnp.ndarray) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def binary_entropy(p: np.ndarray) -> np.ndarray:
+    """Elementwise entropy of a Bernoulli(p) bit, in bits (host side)."""
+    p = np.clip(np.asarray(p, dtype=np.float64), 1e-12, 1.0 - 1e-12)
+    return -(p * np.log2(p) + (1.0 - p) * np.log2(1.0 - p))
+
+
+def entropy_from_counts(counts: np.ndarray, n: int) -> float:
+    """Mean per-dimension bit entropy from set-bit ``counts`` over ``n``
+    rows — the one formula both the sampled probe and the incremental
+    accumulator use."""
+    if n <= 0:
+        return 0.0
+    return float(binary_entropy(counts / n).mean())
+
+
+# ---------------------------------------------------------------------------
+# jitted numeric cores
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _cosine_moments(sample: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean/std of off-diagonal pairwise cosine in a unit-vector sample."""
+    sims = sample @ sample.T
+    s = sample.shape[0]
+    off = ~jnp.eye(s, dtype=jnp.bool_)
+    count = jnp.float32(s * (s - 1))
+    mean = jnp.where(off, sims, 0.0).sum() / count
+    var = jnp.where(off, (sims - mean) ** 2, 0.0).sum() / count
+    return mean, jnp.sqrt(var)
+
+
+@jax.jit
+def _plane_counts(bits: jnp.ndarray) -> jnp.ndarray:
+    """(S, D) bool bit plane -> (D,) set-bit counts."""
+    return bits.sum(axis=0).astype(jnp.int32)
+
+
+@jax.jit
+def _sign_corr(bits: jnp.ndarray) -> jnp.ndarray:
+    """Mean |Pearson corr| between sign bits across dimension pairs.
+
+    Zero-variance dimensions (constant bits) are excluded from the mean
+    — they carry no information, which the entropy statistic already
+    reports; counting their undefined correlation as 0 would *dilute*
+    the redundancy signal of the informative dims.
+    """
+    x = bits.astype(jnp.float32)
+    s, d = x.shape
+    xc = x - x.mean(axis=0)
+    std = jnp.sqrt((xc * xc).mean(axis=0))
+    ok = std > 1e-6
+    denom = jnp.where(ok, std, 1.0)
+    z = (xc / denom) * ok
+    corr = (z.T @ z) / jnp.float32(s)
+    pair = ok[:, None] & ok[None, :] & ~jnp.eye(d, dtype=jnp.bool_)
+    total = jnp.maximum(pair.sum(), 1)
+    return jnp.where(pair, jnp.abs(corr), 0.0).sum() / total
+
+
+@functools.partial(jax.jit, static_argnames=("k", "dim"))
+def _topk_agreement(
+    q_vecs, base_vecs, q_words, base_words, *, k: int, dim: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k overlap of exact-cosine vs symmetric-BQ ranking, plus the
+    30th percentile of the per-query normalized k-th-neighbor margin.
+
+    Queries and base rows are disjoint slices of the sample, so there
+    is no self-match to exclude; ties inside either ranking resolve by
+    index order on both sides (``top_k`` is stable), which makes the
+    statistics deterministic.
+
+    The margin percentile calibrates the adaptive-rerank escalation
+    threshold (``repro.core.beam.beam_margin`` uses the same formula:
+    ``(neutral - d_k) / neutral`` with ``neutral = 4*dim`` for bq2):
+    serve-time queries whose margin falls below the sample's 30th
+    percentile are in their corpus's own low-margin tail.
+    """
+    exact = jax.lax.top_k(q_vecs @ base_vecs.T, k)[1]
+    d = bq.pairwise_distance(
+        bq.Signature(words=q_words, dim=dim),
+        bq.Signature(words=base_words, dim=dim),
+    )
+    neg_topk, quant = jax.lax.top_k(-d, k)
+    hits = (exact[:, :, None] == quant[:, None, :]).any(axis=-1)
+    # bq.pairwise_distance is -similarity and the beam navigates on the
+    # calibrated scale d = 4D - sim, so the beam_margin formula
+    # (neutral - d_k) / neutral reduces to sim_k / 4D
+    neutral = jnp.float32(4 * dim)
+    margin = neg_topk[:, -1].astype(jnp.float32) / neutral
+    return hits.mean(), jnp.percentile(margin, 30.0)
+
+
+# ---------------------------------------------------------------------------
+# host drivers
+# ---------------------------------------------------------------------------
+
+
+def _sample_rows(n: int, take: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if take >= n:
+        return np.arange(n, dtype=np.int64)
+    return rng.choice(n, size=take, replace=False)
+
+
+def probe_corpus(
+    vectors,
+    *,
+    sample: int = DEFAULT_SAMPLE,
+    queries: int = DEFAULT_QUERIES,
+    k: int = DEFAULT_K,
+    seed: int = 0,
+    thresholds: Thresholds = DEFAULT_THRESHOLDS,
+) -> CompatibilityReport:
+    """Probe a float32 corpus (or slice): the full boundary report.
+
+    ``sample`` rows are drawn without replacement (deterministic in
+    ``seed``); the first ``queries`` of them are held out as agreement
+    queries against the remaining rows.  Cost is O(sample² · D) — a
+    ~1k-row sample probes a million-vector corpus in milliseconds.
+    """
+    vectors = jnp.asarray(vectors, dtype=jnp.float32)
+    if vectors.ndim != 2:
+        raise ValueError(f"expected (N, D) vectors, got {vectors.shape}")
+    n, dim = vectors.shape
+    take = min(sample, n)
+    nq = max(1, min(queries, take // 4))
+    if take - nq < k:
+        raise ValueError(
+            f"sample of {take} rows is too small to probe top-{k} "
+            f"agreement with {nq} queries"
+        )
+    rows = _sample_rows(n, take, seed)
+    sample_v = _unit(vectors[jnp.asarray(rows)])
+    sigs = bq.encode(sample_v)
+
+    cos_mean, cos_std = _cosine_moments(sample_v)
+    pos_bits = bq.unpack_bits(sigs.pos, dim)
+    strong_bits = bq.unpack_bits(sigs.strong, dim)
+    sign_entropy = entropy_from_counts(
+        np.asarray(_plane_counts(pos_bits)), take
+    )
+    strong_entropy = entropy_from_counts(
+        np.asarray(_plane_counts(strong_bits)), take
+    )
+    agreement, margin_p30 = _topk_agreement(
+        sample_v[:nq], sample_v[nq:],
+        sigs.words[:nq], sigs.words[nq:],
+        k=k, dim=dim,
+    )
+    return CompatibilityReport(
+        n_sampled=int(take),
+        n_queries=int(nq),
+        k=int(k),
+        dim=int(dim),
+        seed=int(seed),
+        cos_mean=float(cos_mean),
+        cos_std=float(cos_std),
+        sign_entropy=sign_entropy,
+        strong_entropy=strong_entropy,
+        inter_bit_corr=float(_sign_corr(pos_bits)),
+        bq_agreement=float(agreement),
+        margin_p30=float(margin_p30),
+        thresholds=thresholds,
+    )
+
+
+def probe_signatures(
+    words,
+    dim: int,
+    *,
+    sample: int = DEFAULT_SAMPLE,
+    k: int = DEFAULT_K,
+    seed: int = 0,
+    thresholds: Thresholds = DEFAULT_THRESHOLDS,
+) -> CompatibilityReport:
+    """Probe packed signatures alone (vector-free indexes).
+
+    Without float32 ground truth there is no agreement probe and no
+    cosine spread; the report carries the bit-plane statistics, NaN for
+    the rest, and its verdict never reaches green.  ``cos_std`` is set
+    just above the red threshold so the verdict is decided by the sign
+    entropy (the one collapse mode signatures *can* prove).
+    """
+    words = jnp.asarray(words)
+    n = words.shape[0]
+    take = min(sample, n)
+    if take == 0:
+        raise ValueError("cannot probe an empty signature set")
+    rows = jnp.asarray(_sample_rows(n, take, seed))
+    sigs = bq.Signature(words=words[rows], dim=dim)
+    pos_bits = bq.unpack_bits(sigs.pos, dim)
+    strong_bits = bq.unpack_bits(sigs.strong, dim)
+    return CompatibilityReport(
+        n_sampled=int(take),
+        n_queries=0,
+        k=int(k),
+        dim=int(dim),
+        seed=int(seed),
+        cos_mean=float("nan"),
+        cos_std=thresholds.cos_std_red,   # unknown: leave to sign entropy
+        sign_entropy=entropy_from_counts(
+            np.asarray(_plane_counts(pos_bits)), take
+        ),
+        strong_entropy=entropy_from_counts(
+            np.asarray(_plane_counts(strong_bits)), take
+        ),
+        inter_bit_corr=float(_sign_corr(pos_bits)),
+        bq_agreement=float("nan"),
+        thresholds=thresholds,
+    )

@@ -1,0 +1,113 @@
+"""Incremental probe statistics for the streaming lifecycle.
+
+A :class:`ProbeAccumulator` maintains the *exact* per-dimension bit-plane
+counts of the live set under insert/delete — O(B·D) work per mutation
+batch, never a full-store rescan — so a mutable index always knows its
+sign/magnitude entropy without re-probing.  The counts are computed from
+the packed signature words themselves (the planes ARE the statistics),
+which means the accumulator works on vector-free indexes too and a
+from-scratch recompute over the live rows reproduces it exactly:
+
+    acc == ProbeAccumulator.from_words(words[live], dim)
+
+Consolidation is a no-op for the accumulator: deletes already removed
+the dead rows' counts, and reclaiming slots only clears storage the
+accumulator never counted.
+
+The expensive sampled statistics (cosine spread, BQ agreement) are NOT
+maintained incrementally — they are recomputed on demand from a live
+sample (``MutableQuIVerIndex.probe_report``), with the entropy fields
+taken from this accumulator (exact over the whole live set, not a
+sample).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bq
+from repro.probe.diagnostics import entropy_from_counts
+
+
+def _plane_bits(words: np.ndarray, dim: int) -> tuple[np.ndarray, np.ndarray]:
+    """(B, 2W) packed words -> ((B, D) pos bits, (B, D) strong bits)."""
+    words = np.asarray(words, dtype=np.uint32)
+    w = words.shape[-1] // 2
+    bits = np.unpackbits(
+        words.view(np.uint8).reshape(len(words), -1),
+        axis=-1, bitorder="little",
+    )
+    return bits[:, : dim], bits[:, 32 * w: 32 * w + dim]
+
+
+class ProbeAccumulator:
+    """Exact live-set bit-plane counts under insert/delete churn."""
+
+    def __init__(self, dim: int):
+        self.dim = int(dim)
+        self.n = 0
+        self.pos_counts = np.zeros((dim,), dtype=np.int64)
+        self.strong_counts = np.zeros((dim,), dtype=np.int64)
+
+    @classmethod
+    def from_words(cls, words, dim: int) -> "ProbeAccumulator":
+        """From-scratch recompute over a row set (the consistency oracle
+        the incremental path is tested against)."""
+        out = cls(dim)
+        words = np.asarray(words)
+        if len(words):
+            out.add(words)
+        return out
+
+    @classmethod
+    def from_signature(cls, sig: bq.Signature) -> "ProbeAccumulator":
+        return cls.from_words(np.asarray(sig.words), sig.dim)
+
+    # -- mutation ----------------------------------------------------------
+
+    def add(self, words) -> None:
+        """Count a batch of inserted rows' packed words."""
+        pos, strong = _plane_bits(words, self.dim)
+        self.n += len(pos)
+        self.pos_counts += pos.sum(axis=0, dtype=np.int64)
+        self.strong_counts += strong.sum(axis=0, dtype=np.int64)
+
+    def remove(self, words) -> None:
+        """Un-count a batch of deleted rows' packed words."""
+        pos, strong = _plane_bits(words, self.dim)
+        self.n -= len(pos)
+        self.pos_counts -= pos.sum(axis=0, dtype=np.int64)
+        self.strong_counts -= strong.sum(axis=0, dtype=np.int64)
+        if self.n < 0:
+            raise ValueError("removed more rows than were added")
+
+    # -- statistics --------------------------------------------------------
+
+    @property
+    def sign_balance(self) -> np.ndarray:
+        """(D,) fraction of positive signs per dimension."""
+        return self.pos_counts / max(self.n, 1)
+
+    @property
+    def sign_entropy(self) -> float:
+        return entropy_from_counts(self.pos_counts, self.n)
+
+    @property
+    def strong_entropy(self) -> float:
+        return entropy_from_counts(self.strong_counts, self.n)
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, ProbeAccumulator)
+            and self.dim == other.dim
+            and self.n == other.n
+            and np.array_equal(self.pos_counts, other.pos_counts)
+            and np.array_equal(self.strong_counts, other.strong_counts)
+        )
+
+    def __repr__(self) -> str:
+        return (
+            f"ProbeAccumulator(n={self.n}, dim={self.dim}, "
+            f"sign_entropy={self.sign_entropy:.3f}, "
+            f"strong_entropy={self.strong_entropy:.3f})"
+        )

@@ -42,6 +42,11 @@ class Retriever:
     RAG (language, tenant, source tags), evaluated as packed bitset
     ops inside the BQ hot path (DESIGN.md §9).  The index needs labels
     attached (``attach_labels`` / ``insert(labels=...)``).
+
+    ``adaptive`` (default None) follows the index's own
+    :class:`~repro.probe.NavPolicy` (auto-built indexes escalate
+    tight-margin retrievals per query, DESIGN.md §10); pass True/False
+    to force it per retriever.
     """
     index: Any                      # QuIVerIndex | MutableQuIVerIndex
     doc_tokens: np.ndarray          # (n_docs, doc_len) int32
@@ -52,6 +57,7 @@ class Retriever:
     expand: int = 1
     pad_token: int = 0
     filter: Any = None              # label predicate (repro.filter)
+    adaptive: bool | None = None    # None: the index policy decides
 
     def augment(
         self, tokens: np.ndarray, *, filter=None
@@ -59,7 +65,7 @@ class Retriever:
         emb = np.asarray(self.embed_fn(jnp.asarray(tokens)))
         ids, _ = self.index.search(
             jnp.asarray(emb), k=self.k, ef=self.ef, nav=self.nav,
-            expand=self.expand,
+            expand=self.expand, adaptive=self.adaptive,
             filter=filter if filter is not None else self.filter,
         )
         ids = np.asarray(ids).reshape(len(tokens), -1)

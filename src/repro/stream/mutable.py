@@ -41,11 +41,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bq
-from repro.core.beam import batched_beam_search
+from repro.core.beam import (
+    batch_bucket,
+    batched_beam_search,
+    beam_margin,
+    escalated_search,
+    pad_rows,
+)
 from repro.core.index import (
     QuIVerIndex,
-    batch_bucket,
-    pad_rows,
     params_from_npz,
     params_to_npz,
     rerank_f32,
@@ -64,6 +68,14 @@ from repro.filter import (
     route,
     validate,
     widened_ef,
+)
+from repro.probe import (
+    CompatibilityReport,
+    NavPolicy,
+    ProbeAccumulator,
+    probe_corpus,
+    probe_signatures,
+    resolve_schedule,
 )
 from repro.stream.consolidate import link_chunk, overflow_rows, repair_rows
 
@@ -153,9 +165,12 @@ def _search_op(words, vectors, adj, live, result_valid, medoid, reprs,
         reprs, adj, medoid, dist_fn=backend.dist_fn, ef=ef, n=n,
         expand=expand, node_valid=live, result_valid=result_valid,
     )
+    margin = beam_margin(res.dists, k, backend.neutral_dist)
     if use_rerank and vectors is not None:
-        return rerank_f32(res.ids, queries, vectors, k)
-    return topk_by_dist(res.ids, res.dists, k)
+        ids, scores = rerank_f32(res.ids, queries, vectors, k)
+    else:
+        ids, scores = topk_by_dist(res.ids, res.dists, k)
+    return ids, scores, margin
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "dim", "chunk"))
@@ -207,9 +222,16 @@ class MutableQuIVerIndex:
         keep_vectors: bool = True,
         rotation: jnp.ndarray | None = None,
         n_labels: int | None = None,
+        policy: NavPolicy | None = None,
+        report: CompatibilityReport | None = None,
     ):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
+        if metric_kind == "auto":
+            raise ValueError(
+                "metric='auto' needs a corpus to probe; use build() "
+                "(or probe_report() + select_policy after inserting)"
+            )
         w2 = 2 * bq.n_words(dim)
         self.capacity = int(capacity)
         self.dim = int(dim)
@@ -235,6 +257,12 @@ class MutableQuIVerIndex:
         self.generation = 0              # bumped on every mutation
         self.stats = StreamStats()
         self._free: list[int] = []       # reclaimed slots, reused first
+        # applicability-boundary state (DESIGN.md §10): the nav policy /
+        # probe report travel with the index; the accumulator keeps the
+        # live set's exact bit-plane statistics current under churn
+        self.policy = policy
+        self.report = report
+        self.probe_acc = ProbeAccumulator(dim)
 
     # -- constructors ------------------------------------------------------
 
@@ -254,7 +282,10 @@ class MutableQuIVerIndex:
             metric_kind=index.metric_kind,
             keep_vectors=index.vectors is not None,
             rotation=index.rotation,
+            policy=index.policy,
+            report=index.report,
         )
+        out.probe_acc.add(np.asarray(index.sigs.words))
         out.words = out.words.at[:n].set(index.sigs.words)
         out.adjacency = out.adjacency.at[:n].set(index.adjacency)
         out.deg = out.deg.at[:n].set(
@@ -331,6 +362,51 @@ class MutableQuIVerIndex:
             node_valid=self._live_dev(), min_count=min_count,
         )
 
+    # -- applicability probe (DESIGN.md §10) -------------------------------
+
+    def probe_report(
+        self,
+        *,
+        sample: int = 1024,
+        queries: int = 64,
+        k: int = 10,
+        seed: int = 0,
+    ) -> CompatibilityReport:
+        """Probe the *live* set: sampled statistics plus the exact
+        incremental bit-plane entropies from :class:`ProbeAccumulator`.
+
+        The sampled stats (cosine spread, BQ agreement, margins) are
+        recomputed from a live sample on demand; the entropy fields are
+        taken from the accumulator, which covers every live row exactly
+        and costs nothing here.  Vector-free indexes degrade to
+        signature-only probes (agreement NaN, verdict capped at amber).
+        """
+        if self.n_live == 0:
+            raise ValueError("cannot probe an empty index")
+        live_idx = jnp.asarray(
+            np.nonzero(self.live)[0].astype(np.int32)
+        )
+        if self.vectors is not None:
+            # probe the served encoding: signatures were built from
+            # rotated vectors, so the sampled stats must be too (the
+            # accumulator's words are already rotated)
+            v = self.vectors[live_idx]
+            if self.rotation is not None:
+                v = v @ self.rotation
+            r = probe_corpus(
+                v, sample=sample, queries=queries, k=k, seed=seed,
+            )
+        else:
+            r = probe_signatures(
+                self.words[live_idx], self.dim, sample=sample, k=k,
+                seed=seed,
+            )
+        return dataclasses.replace(
+            r,
+            sign_entropy=self.probe_acc.sign_entropy,
+            strong_entropy=self.probe_acc.strong_entropy,
+        )
+
     # -- introspection -----------------------------------------------------
 
     @property
@@ -357,7 +433,7 @@ class MutableQuIVerIndex:
         )
         cold = self.vectors.size * 4 if self.vectors is not None else 0
         hot = sig_bytes + adj_bytes + mask_bytes + label_bytes
-        return {
+        out = {
             "hot_signature_bytes": int(sig_bytes),
             "hot_adjacency_bytes": int(adj_bytes),
             "hot_mask_bytes": int(mask_bytes),
@@ -366,6 +442,12 @@ class MutableQuIVerIndex:
             "cold_vector_bytes": int(cold),
             "total_bytes": int(hot + cold),
         }
+        if self.policy is not None:
+            out["nav_policy"] = self.policy.describe()
+            out["probe_verdict"] = (
+                self.report.verdict if self.report is not None else "n/a"
+            )
+        return out
 
     def _live_dev(self) -> jnp.ndarray:
         return jnp.asarray(self.live)
@@ -420,6 +502,7 @@ class MutableQuIVerIndex:
 
         enc = v @ self.rotation if self.rotation is not None else v
         sig_words = bq.encode(enc).words
+        self.probe_acc.add(np.asarray(sig_words))
         dev_ids = jnp.asarray(ids)
         self.words = self.words.at[dev_ids].set(sig_words)
         if self.vectors is not None:
@@ -470,6 +553,11 @@ class MutableQuIVerIndex:
         if len(ids) and (ids.min() < 0 or ids.max() >= self.capacity):
             raise ValueError(f"ids out of range [0, {self.capacity})")
         was_live = self.live[ids].sum()
+        gone = np.unique(ids[self.live[ids]])
+        if gone.size:
+            # un-count exactly the rows leaving the live set (duplicate
+            # and already-dead ids must not decrement twice)
+            self.probe_acc.remove(np.asarray(self.words[jnp.asarray(gone)]))
         self.live[ids] = False
         if self.labels is not None:
             self.labels.clear(ids)
@@ -581,10 +669,13 @@ class MutableQuIVerIndex:
         query_batch: int = 256,
         filter=None,
         selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR,
+        adaptive: bool | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Tombstone-aware search: same contract as ``QuIVerIndex.search``
         (including the score scale: cosine with ``rerank=True``, negated
-        navigation distances with ``rerank=False``) but dead or
+        navigation distances with ``rerank=False``, and the
+        :class:`NavPolicy` schedule — ef scaling plus per-query
+        adaptive escalation — when the index carries one) but dead or
         never-inserted slots cannot appear in the results.
 
         ``filter`` composes with tombstones through the beam's two-mask
@@ -599,6 +690,8 @@ class MutableQuIVerIndex:
         if self.n_live == 0:
             return (np.full((nq, k), -1, np.int32),
                     np.full((nq, k), -np.inf, np.float32))
+        ef, adaptive, sched = resolve_schedule(self.policy, nav, ef,
+                                               adaptive)
         kind = nav or self.metric_kind
         enc_in = queries
         if self.rotation is not None and kind != "float32":
@@ -644,22 +737,33 @@ class MutableQuIVerIndex:
                 if ent >= 0 and self.live[ent]:
                     start = jnp.int32(ent)
 
-        out_ids, out_scores = [], []
-        for s in range(0, nq, query_batch):
-            rep = reprs[s:s + query_batch]
-            q = queries[s:s + query_batch]
-            real = rep.shape[0]
-            bucket = batch_bucket(real, query_batch)
-            ids, scores = _search_op(
-                self.words, self.vectors, self.adjacency, live,
-                result_valid, start,
-                pad_rows(rep, bucket), pad_rows(q, bucket),
-                kind=kind, dim=self.dim, ef=ef_run, n=self.capacity,
-                expand=expand, k=k, use_rerank=rerank,
-            )
-            out_ids.append(np.asarray(ids[:real]))
-            out_scores.append(np.asarray(scores[:real]))
-        return np.concatenate(out_ids), np.concatenate(out_scores)
+        def run(reprs_r, queries_r, ef_r, want_margin):
+            # margins are computed inside the jitted _search_op either
+            # way (fused, ~free); want_margin only gates the host copy
+            out_ids, out_scores, out_margin = [], [], []
+            for s in range(0, reprs_r.shape[0], query_batch):
+                rep = reprs_r[s:s + query_batch]
+                q = queries_r[s:s + query_batch]
+                real = rep.shape[0]
+                bucket = batch_bucket(real, query_batch)
+                ids, scores, margin = _search_op(
+                    self.words, self.vectors, self.adjacency, live,
+                    result_valid, start,
+                    pad_rows(rep, bucket), pad_rows(q, bucket),
+                    kind=kind, dim=self.dim, ef=ef_r, n=self.capacity,
+                    expand=expand, k=k, use_rerank=rerank,
+                )
+                out_ids.append(np.asarray(ids[:real]))
+                out_scores.append(np.asarray(scores[:real]))
+                if want_margin:
+                    out_margin.append(np.asarray(margin[:real]))
+            return (np.concatenate(out_ids), np.concatenate(out_scores),
+                    np.concatenate(out_margin) if want_margin else None)
+
+        return escalated_search(
+            run, reprs, queries, ef_run, adaptive=adaptive,
+            margin_thr=sched.escalate_margin, mult=sched.escalate_mult,
+        )
 
     # -- snapshots ---------------------------------------------------------
 
@@ -702,6 +806,8 @@ class MutableQuIVerIndex:
                 self.labels.compact(live_idx)
                 if self.labels is not None else None
             ),
+            policy=self.policy,
+            report=self.report,
         )
 
     # -- persistence -------------------------------------------------------
@@ -710,10 +816,16 @@ class MutableQuIVerIndex:
         label_fields = (
             self.labels.to_npz_fields() if self.labels is not None else {}
         )
+        probe_fields = {}
+        if self.policy is not None:
+            probe_fields.update(self.policy.to_npz_fields())
+        if self.report is not None:
+            probe_fields.update(self.report.to_npz_fields())
         np.savez_compressed(
             path,
             stream_format=np.int64(1),
             **label_fields,
+            **probe_fields,
             words=np.asarray(self.words),
             dim=np.int64(self.dim),
             adjacency=np.asarray(self.adjacency),
@@ -766,4 +878,11 @@ class MutableQuIVerIndex:
         out.size = int(z["size"])
         out.medoid = int(z["medoid"])
         out.generation = int(z["generation"])
+        out.policy = NavPolicy.from_npz(z)
+        out.report = CompatibilityReport.from_npz(z)
+        # the accumulator is derived state: recompute from the live rows
+        # (exactly what the incremental path would have maintained)
+        out.probe_acc = ProbeAccumulator.from_words(
+            np.asarray(out.words)[out.live], dim
+        )
         return out

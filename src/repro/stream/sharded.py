@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.distributed import ShardedIndex, search_sharded
 from repro.core.vamana import BuildParams
+from repro.probe import CompatibilityReport, merge_reports
 from repro.stream.mutable import MutableQuIVerIndex
 
 import jax.numpy as jnp
@@ -162,6 +163,21 @@ class StreamingShardedIndex:
         """Per-shard repair + reclamation (embarrassingly parallel)."""
         return [s.consolidate() for s in self.shards]
 
+    # -- applicability probe (DESIGN.md §10) -------------------------------
+
+    def probe_report(self, **probe_kw) -> CompatibilityReport:
+        """Fleet-wide compatibility report: per-shard live-set probes
+        (incremental entropies + sampled stats, see
+        ``MutableQuIVerIndex.probe_report``) merged sample-weighted —
+        the streaming analogue of ``build_sharded(metric="auto")``'s
+        build-time merge.  Empty shards contribute nothing."""
+        reports = [
+            s.probe_report(**probe_kw) for s in self.shards if s.n_live
+        ]
+        if not reports:
+            raise ValueError("cannot probe an empty fleet")
+        return merge_reports(reports)
+
     # -- search ------------------------------------------------------------
 
     def snapshot(self) -> ShardedIndex:
@@ -207,6 +223,16 @@ class StreamingShardedIndex:
             label_counts=(
                 np.sum([s.labels.counts for s in self.shards], axis=0)
                 if labeled else None
+            ),
+            # one fleet schedule only when every shard agrees (shards
+            # adopted from differently-probed indexes get no schedule)
+            policy=(
+                self.shards[0].policy
+                if len({s.policy for s in self.shards}) == 1 else None
+            ),
+            report=(
+                self.shards[0].report
+                if len({s.report for s in self.shards}) == 1 else None
             ),
         )
         self._snapshot_gens = gens

@@ -1,0 +1,296 @@
+"""Applicability-boundary probe tests (DESIGN.md §10): deterministic
+diagnostics, report/policy persistence, nav="auto" ladder selection on
+both sides of the boundary, incremental probe-stat consistency under
+streaming churn, and the adaptive-rerank escalation path."""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bq
+from repro.core.beam import INF, beam_margin
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.data.datasets import make_dataset
+from repro.probe import (
+    CompatibilityReport,
+    NavPolicy,
+    ProbeAccumulator,
+    Thresholds,
+    merge_reports,
+    probe_corpus,
+    probe_signatures,
+    select_policy,
+)
+from repro.stream import MutableQuIVerIndex
+
+jax.config.update("jax_platform_name", "cpu")
+
+PARAMS = BuildParams(m=6, ef_construction=32, prune_pool=32, chunk=128)
+
+
+@functools.lru_cache(maxsize=None)
+def _corpus(name: str, n: int = 1200):
+    base, queries = make_dataset(name, n=n, queries=20)
+    return base, queries
+
+
+# -- diagnostics -------------------------------------------------------------
+
+
+def test_probe_deterministic():
+    base, _ = _corpus("minilm-surrogate")
+    r1 = probe_corpus(base, sample=512, seed=3)
+    r2 = probe_corpus(base, sample=512, seed=3)
+    assert r1 == r2                       # bit-identical, incl. floats
+    r3 = probe_corpus(base, sample=512, seed=4)
+    assert r3 != r1                       # the sample actually moves
+
+
+def test_probe_statistics_ranges():
+    base, _ = _corpus("minilm-surrogate")
+    r = probe_corpus(base, sample=512)
+    assert 0.0 <= r.bq_agreement <= 1.0
+    assert 0.0 <= r.sign_entropy <= 1.0
+    assert 0.0 <= r.strong_entropy <= 1.0
+    assert 0.0 <= r.inter_bit_corr <= 1.0
+    assert r.cos_std > 0.0
+    assert r.n_sampled == 512
+    assert not math.isnan(r.margin_p30)
+
+
+def test_probe_verdicts_match_paper_tiers():
+    """The falsifiable boundary: contrastive -> green, Euclidean-native
+    CV (constant sign plane) and the isotropic sphere -> red."""
+    green, _ = _corpus("minilm-surrogate")
+    assert probe_corpus(green).verdict == "green"
+    cv, _ = _corpus("sift-like")
+    rcv = probe_corpus(cv)
+    assert rcv.verdict == "red"
+    assert rcv.sign_entropy < 0.05        # Finding 1: dead sign plane
+    sphere, _ = _corpus("random-sphere")
+    assert probe_corpus(sphere).verdict == "red"
+
+
+def test_probe_signatures_only_caps_at_amber():
+    base, _ = _corpus("minilm-surrogate")
+    sig = bq.encode(np.asarray(base[:500]))
+    r = probe_signatures(sig.words, sig.dim, sample=256)
+    assert math.isnan(r.bq_agreement)
+    assert r.verdict == "amber"           # no falsifiable evidence
+    cv, _ = _corpus("sift-like")
+    sig2 = bq.encode(np.asarray(cv[:500]))
+    assert probe_signatures(sig2.words, sig2.dim).verdict == "red"
+
+
+def test_merge_reports_weights_by_sample():
+    base, _ = _corpus("minilm-surrogate")
+    r1 = probe_corpus(base[:600], sample=512, seed=0)
+    r2 = probe_corpus(base[600:], sample=512, seed=1)
+    m = merge_reports([r1, r2])
+    assert m.n_sampled == r1.n_sampled + r2.n_sampled
+    lo, hi = sorted([r1.bq_agreement, r2.bq_agreement])
+    assert lo <= m.bq_agreement <= hi
+    assert m.verdict in ("green", "amber", "red")
+    with pytest.raises(ValueError):
+        merge_reports([])
+
+
+def test_thresholds_drive_verdict():
+    base, _ = _corpus("minilm-surrogate")
+    r = probe_corpus(base)
+    strict = dataclasses.replace(
+        r, thresholds=Thresholds(agreement_green=1.01)
+    )
+    assert strict.verdict == "amber"
+    impossible = dataclasses.replace(
+        r, thresholds=Thresholds(agreement_red=1.01)
+    )
+    assert impossible.verdict == "red"
+
+
+# -- policy ------------------------------------------------------------------
+
+
+def test_select_policy_ladder():
+    base, _ = _corpus("minilm-surrogate")
+    green = probe_corpus(base)
+    assert select_policy(green).nav == "bq2"
+    cv, _ = _corpus("sift-like")
+    red = probe_corpus(cv)
+    assert select_policy(red).nav == "float32"
+    assert select_policy(red, have_vectors=False).nav == "adc"
+    amber = dataclasses.replace(
+        green, thresholds=Thresholds(agreement_green=1.01)
+    )
+    pol = select_policy(amber)
+    assert pol.nav == "bq2" and pol.adaptive and pol.ef_scale == 2
+    # the escalation threshold is calibrated from the probe sample
+    assert pol.escalate_margin == pytest.approx(amber.margin_p30)
+
+
+def test_nav_policy_validation():
+    with pytest.raises(ValueError):
+        NavPolicy(nav="bq1")              # not on the ladder
+    with pytest.raises(ValueError):
+        NavPolicy(nav="bq2", ef_scale=0)
+
+
+# -- auto selection on both sides of the boundary ----------------------------
+
+
+def test_build_auto_cosine_native_picks_bq2():
+    base, queries = _corpus("minilm-surrogate")
+    idx = QuIVerIndex.build(base, PARAMS, nav="auto", probe_sample=512)
+    assert idx.metric_kind == "bq2"
+    assert idx.policy is not None and idx.policy.source == "probe"
+    assert idx.report is not None and idx.report.verdict == "green"
+    ids, _ = idx.search(queries, k=5, ef=32)
+    assert (np.asarray(ids) >= 0).all()
+    mem = idx.memory_breakdown()
+    assert mem["nav_policy"].startswith("bq2")
+    assert mem["probe_verdict"] == "green"
+
+
+def test_build_auto_euclidean_routes_off_bq2():
+    """Gaussian-Euclidean (isotropic sphere after L2-norm) must route to
+    a non-bq2 rung; with cold vectors that is float32."""
+    base, _ = _corpus("random-sphere")
+    idx = QuIVerIndex.build(base, PARAMS, nav="auto", probe_sample=512)
+    assert idx.metric_kind == "float32"
+    assert idx.policy.nav == "float32" and idx.policy.ef_scale > 1
+    base_cv, _ = _corpus("sift-like")
+    idx_cv = QuIVerIndex.build(
+        base_cv, PARAMS, nav="auto", probe_sample=512, keep_vectors=False
+    )
+    assert idx_cv.metric_kind == "adc"    # no cold tier -> adc rung
+
+
+def test_auto_probe_uses_rotated_encoding():
+    """With rotate_seed the signatures are built from rotated vectors;
+    the probe must measure that encoding, not the raw input."""
+    import jax.numpy as jnp
+
+    from repro.core.index import _normalize
+
+    base, _ = _corpus("sift-like")
+    idx = QuIVerIndex.build(
+        base, PARAMS, nav="auto", probe_sample=256, rotate_seed=7
+    )
+    enc = _normalize(jnp.asarray(base, dtype=jnp.float32)) @ idx.rotation
+    assert idx.report == probe_corpus(enc, sample=256)
+    # rotation restores sign balance on the non-negative CV corpus
+    assert idx.report.sign_entropy > 0.1
+
+
+def test_auto_report_save_load_roundtrip(tmp_path):
+    base, queries = _corpus("minilm-surrogate")
+    idx = QuIVerIndex.build(base, PARAMS, nav="auto", probe_sample=512)
+    path = str(tmp_path / "auto.npz")
+    idx.save(path)
+    idx2 = QuIVerIndex.load(path)
+    assert idx2.policy == idx.policy
+    assert idx2.report == idx.report
+    assert idx2.metric_kind == idx.metric_kind
+    ids1, _ = idx.search(queries, k=5, ef=32)
+    ids2, _ = idx2.search(queries, k=5, ef=32)
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
+
+
+def test_plain_build_has_no_policy(tmp_path):
+    base, _ = _corpus("minilm-surrogate")
+    idx = QuIVerIndex.build(base[:400], PARAMS)
+    assert idx.policy is None and idx.report is None
+    path = str(tmp_path / "plain.npz")
+    idx.save(path)
+    loaded = QuIVerIndex.load(path)
+    assert loaded.policy is None and loaded.report is None
+    assert "nav_policy" not in idx.memory_breakdown()
+
+
+# -- adaptive rerank ---------------------------------------------------------
+
+
+def test_beam_margin_semantics():
+    dists = np.asarray([
+        [1.0, 2.0, 3.0, 4.0],            # margin: (10 - 2) / 10
+        [9.0, 9.5, float(INF), float(INF)],   # starved at k=2 is fine
+        [1.0, float(INF), float(INF), float(INF)],  # starved -> -1
+    ], dtype=np.float32)
+    m = np.asarray(beam_margin(dists, 2, 10.0))
+    assert m[0] == pytest.approx(0.8)
+    assert m[1] == pytest.approx((10.0 - 9.5) / 10.0)
+    assert m[2] == -1.0
+
+
+def test_adaptive_escalation_recovers_recall():
+    """Amber-style schedule on a corpus where wider pools help: the
+    escalated search must not lose recall, and must escalate only the
+    tight-margin tail."""
+    from repro.core.baselines import flat_search, recall_at_k
+
+    base, queries = _corpus("glove-like")
+    gt, _ = flat_search(base, queries, k=10)
+    idx = QuIVerIndex.build(base, PARAMS, nav="auto", probe_sample=512)
+    plain_ids, _ = idx.search(queries, k=10, ef=64, nav="bq2",
+                              adaptive=False)
+    auto_ids, _ = idx.search(queries, k=10, ef=64)
+    r_plain = recall_at_k(plain_ids, gt)
+    r_auto = recall_at_k(auto_ids, gt)
+    assert r_auto >= r_plain - 1e-9
+    # forcing adaptive on an explicitly-navigated search also works
+    forced_ids, _ = idx.search(queries, k=10, ef=64, nav="bq2",
+                               adaptive=True)
+    assert recall_at_k(forced_ids, gt) >= r_plain - 1e-9
+
+
+# -- incremental probe stats under churn -------------------------------------
+
+
+def test_accumulator_matches_recompute_after_churn():
+    base, _ = _corpus("minilm-surrogate")
+    m = MutableQuIVerIndex.build(
+        base[:600], PARAMS, capacity=1500, metric="auto",
+    )
+    assert m.policy is not None           # adopted from the auto build
+    ids = m.insert(base[600:800])
+    m.delete(ids[:50])
+    m.delete(ids[:10])                    # double-delete must not double-count
+    m.consolidate()
+    m.insert(base[800:900])
+    m.delete(np.arange(25))
+    ref = ProbeAccumulator.from_words(
+        np.asarray(m.words)[m.live], m.dim
+    )
+    assert m.probe_acc == ref
+    assert m.probe_acc.n == m.n_live
+
+
+def test_mutable_probe_report_and_save_load(tmp_path):
+    base, _ = _corpus("minilm-surrogate")
+    m = MutableQuIVerIndex.build(
+        base[:600], PARAMS, capacity=1500, metric="auto",
+    )
+    m.insert(base[600:700])
+    m.delete(np.arange(40))
+    r = m.probe_report(sample=256)
+    assert isinstance(r, CompatibilityReport)
+    # entropy fields come from the exact incremental accumulator
+    assert r.sign_entropy == pytest.approx(m.probe_acc.sign_entropy)
+    path = str(tmp_path / "stream.npz")
+    m.save(path)
+    m2 = MutableQuIVerIndex.load(path)
+    assert m2.policy == m.policy
+    assert m2.report == m.report
+    assert m2.probe_acc == m.probe_acc    # recomputed == maintained
+    frozen = m2.freeze()
+    assert frozen.policy == m.policy
+
+
+def test_mutable_empty_rejects_auto():
+    with pytest.raises(ValueError, match="auto"):
+        MutableQuIVerIndex.empty(32, 100, PARAMS, metric="auto")
