@@ -21,6 +21,7 @@ from benchmarks import (
     construction,
     filtered,
     kernel_bench,
+    serve,
     streaming,
     table2_memory,
     table5_recall_qps,
@@ -41,6 +42,7 @@ TABLES = {
     "construction": construction.run,
     "streaming": streaming.run,
     "filtered": filtered.run,
+    "serve": serve.run,
 }
 
 

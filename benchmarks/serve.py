@@ -1,0 +1,232 @@
+"""Serve-path load generator: the engine's QPS/p99 headline.
+
+Closed- and open-loop traffic over the continuous-batching
+:class:`~repro.serve.engine.QueryEngine` vs the per-call
+``index.search`` baseline, on the same request mix (a blend of
+singleton, small-batch and filtered requests — the shape RAG and
+multi-tenant serving actually produce).  Records p50/p99 request
+latency, QPS, plan-cache hit rate and the steady-state retrace count
+into ``BENCH_serve.json`` via ``benchmarks/run.py``.
+
+Knobs (all env):
+
+* ``REPRO_SERVE_CLIENTS`` (8) — closed-loop concurrency;
+* ``REPRO_SERVE_ROUNDS`` (20) — measured admission windows per phase;
+* ``REPRO_SERVE_P99_MS`` (5000) — assertion threshold (toy scale);
+* ``REPRO_SERVE_ASSERT`` (0) — enable the CI smoke assertions
+  (nonzero QPS, p99 under threshold, zero steady-state retraces,
+  plan-cache hit rate >= 0.95).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_Q, dataset, index_for
+from repro.plan import trace
+from repro.serve.engine import QueryEngine
+
+CLIENTS = int(os.environ.get("REPRO_SERVE_CLIENTS", 8))
+ROUNDS = int(os.environ.get("REPRO_SERVE_ROUNDS", 20))
+P99_MS = float(os.environ.get("REPRO_SERVE_P99_MS", 5000))
+ASSERT = os.environ.get("REPRO_SERVE_ASSERT", "0") == "1"
+
+DATASET = "minilm-surrogate"
+N_LABELS = 4
+FILTER_LABEL = 1
+EF = 64
+K = 10
+
+
+def _request_mix(queries: np.ndarray, rng: np.random.Generator):
+    """One closed-loop round of requests: per client a (queries, kwargs)
+    pair — mostly small unfiltered batches, some singletons, some
+    filtered — drawn from the query pool."""
+    out = []
+    for c in range(CLIENTS):
+        size = [1, 2, 4, 4][c % 4]
+        rows = rng.integers(0, len(queries), size)
+        kwargs = {"ef": EF, "k": K}
+        if c % 4 == 3:
+            kwargs["filter"] = FILTER_LABEL
+        out.append((queries[rows], kwargs))
+    return out
+
+
+def _percentiles(lat_s: list[float]) -> tuple[float, float]:
+    a = np.asarray(lat_s, dtype=np.float64) * 1e3
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def _closed_loop_engine(engine, rounds, queries, rng):
+    """Every client keeps exactly one request in flight: submit all,
+    pump one admission window, repeat."""
+    lat, nq = [], 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        tickets = []
+        for q, kw in _request_mix(queries, rng):
+            tickets.append(engine.submit(q, **kw))
+            nq += len(q)
+        engine.pump()
+        for t in tickets:
+            engine.result(t)
+            lat.append(engine.ticket(t).latency)
+    wall = time.perf_counter() - t0
+    return lat, nq, wall
+
+
+def _closed_loop_percall(index, rounds, queries, rng):
+    """The pre-engine serving shape: one ``index.search`` per request."""
+    lat, nq = [], 0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for q, kw in _request_mix(queries, rng):
+            t1 = time.perf_counter()
+            index.search(q, **kw)
+            lat.append(time.perf_counter() - t1)
+            nq += len(q)
+    wall = time.perf_counter() - t0
+    return lat, nq, wall
+
+
+def _open_loop_engine(engine, queries, rng, *, rate_qps, n_requests,
+                      deadline_ms=None):
+    """Fixed-rate arrivals: requests are submitted on their schedule
+    regardless of completions (queueing shows up as latency), pumping
+    one admission window per arrival step."""
+    mix = [_request_mix(queries, rng)[i % CLIENTS]
+           for i in range(n_requests)]
+    mean_q = np.mean([len(q) for q, _ in mix])
+    interval = mean_q / rate_qps
+    tickets = []
+    t0 = time.perf_counter()
+    next_due = 0.0
+    for q, kw in mix:
+        # busy-wait to the arrival slot (intervals are sub-ms at toy
+        # scale; sleep() granularity would distort the schedule)
+        while time.perf_counter() - t0 < next_due:
+            pass
+        if deadline_ms is not None:
+            kw = dict(kw, deadline_ms=deadline_ms)
+        tickets.append(engine.submit(q, **kw))
+        engine.pump()
+        next_due += interval
+    for t in tickets:
+        if engine.poll(t) is None:
+            engine.pump()
+    wall = time.perf_counter() - t0
+    lat = [engine.ticket(t).latency for t in tickets]
+    nq = int(sum(len(q) for q, _ in mix))
+    return lat, nq, wall
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(7)
+    base, queries = dataset(DATASET)
+    queries = np.asarray(queries, dtype=np.float32)[:BENCH_Q]
+    idx, _ = index_for(DATASET)
+    if idx.labels is None:
+        labels = np.random.default_rng(0).integers(0, N_LABELS, len(base))
+        idx.attach_labels(list(labels), n_labels=N_LABELS)
+        idx.build_label_entries(min_count=32)
+
+    engine = QueryEngine(idx, default_k=K, default_ef=EF)
+    # warm the closed plan set: unfiltered + filtered, singleton bucket
+    # through the coalesced-round bucket
+    buckets = (8, 32)
+    engine.warmup(buckets=buckets,
+                  configs=({}, {"filter": FILTER_LABEL}))
+    # one throwaway round so every (plan, coalesced-bucket) pair the
+    # workload produces is compiled before measurement starts
+    _closed_loop_engine(engine, 2, queries, np.random.default_rng(7))
+
+    rows = []
+    steady = trace.snapshot(idx.plans.trace_prefix())
+
+    lat, nq, wall = _closed_loop_engine(engine, ROUNDS, queries, rng)
+    p50, p99 = _percentiles(lat)
+    retraces = steady.delta()
+    rep = engine.stats_report()
+    rows.append({
+        "name": "serve_closed_engine",
+        "us_per_call": wall / nq * 1e6,
+        "p50_ms": round(p50, 3), "p99_ms": round(p99, 3),
+        "requests": len(lat), "queries": nq,
+        "plan_hit_rate": round(rep["plan_hit_rate"], 4),
+        "retraces_steady": retraces,
+        "windows": rep["windows"], "batches": rep["batches"],
+    })
+    engine_qps = nq / wall
+
+    lat_b, nq_b, wall_b = _closed_loop_percall(
+        idx, ROUNDS, queries, np.random.default_rng(7)
+    )
+    p50_b, p99_b = _percentiles(lat_b)
+    rows.append({
+        "name": "serve_closed_percall",
+        "us_per_call": wall_b / nq_b * 1e6,
+        "p50_ms": round(p50_b, 3), "p99_ms": round(p99_b, 3),
+        "requests": len(lat_b), "queries": nq_b,
+    })
+    baseline_qps = nq_b / wall_b
+
+    # open loop at ~70% of measured closed-loop capacity
+    lat_o, nq_o, wall_o = _open_loop_engine(
+        engine, queries, rng, rate_qps=0.7 * engine_qps,
+        n_requests=max(CLIENTS * ROUNDS // 2, 8),
+    )
+    p50_o, p99_o = _percentiles(lat_o)
+    rows.append({
+        "name": "serve_open_engine",
+        "us_per_call": wall_o / nq_o * 1e6,
+        "p50_ms": round(p50_o, 3), "p99_ms": round(p99_o, 3),
+        "offered_qps": round(0.7 * engine_qps, 1),
+        "requests": len(lat_o), "queries": nq_o,
+    })
+
+    # deadline pressure: budgets near the observed per-request p50
+    # force the engine onto the ef-degradation ladder instead of
+    # dropping (the heavy widened-ef filtered plan degrades first)
+    deadline_ms = max(2.0 * p50_o, 1.0)
+    pre_drop, pre_deg = engine.stats.dropped, engine.stats.degraded
+    lat_d, nq_d, wall_d = _open_loop_engine(
+        engine, queries, rng, rate_qps=1.5 * engine_qps,
+        n_requests=max(CLIENTS * ROUNDS // 2, 8),
+        deadline_ms=deadline_ms,
+    )
+    p50_d, p99_d = _percentiles(lat_d)
+    rows.append({
+        "name": "serve_deadline_mix",
+        "us_per_call": wall_d / nq_d * 1e6,
+        "p50_ms": round(p50_d, 3), "p99_ms": round(p99_d, 3),
+        "deadline_ms": round(deadline_ms, 3),
+        "degraded": engine.stats.degraded - pre_deg,
+        "dropped": engine.stats.dropped - pre_drop,
+        "requests": len(lat_d), "queries": nq_d,
+    })
+
+    rows.append({
+        "name": "serve_summary",
+        "engine_qps": round(engine_qps, 1),
+        "percall_qps": round(baseline_qps, 1),
+        "speedup": round(engine_qps / max(baseline_qps, 1e-9), 2),
+        "plan_hit_rate": round(rep["plan_hit_rate"], 4),
+        "retraces_steady": retraces,
+        "plans_compiled": rep["plan_plans_compiled"],
+    })
+
+    if ASSERT:
+        assert engine_qps > 0, "engine QPS must be nonzero"
+        assert p99 < P99_MS, f"closed-loop p99 {p99:.1f}ms >= {P99_MS}ms"
+        assert retraces == 0, (
+            f"steady-state serving retraced {retraces}x: "
+            f"{steady.delta_by_program()}"
+        )
+        assert rep["plan_hit_rate"] >= 0.95, (
+            f"plan-cache hit rate {rep['plan_hit_rate']:.3f} < 0.95"
+        )
+    return rows

@@ -11,6 +11,7 @@ from repro.core.baselines import flat_search, recall_at_k
 from repro.core.index import QuIVerIndex
 from repro.core.vamana import BuildParams
 from repro.data.datasets import make_dataset
+from repro.serve.engine import QueryEngine
 
 
 def main():
@@ -57,6 +58,21 @@ def main():
     print("save/load roundtrip OK:",
           bool((ids2 == index.search(jnp.asarray(queries), k=10, ef=64)[0])
                .all()))
+
+    # 6. serving: every search() above lowered to a compiled QueryPlan
+    # (DESIGN.md §11) — resolved once, jit-compiled once, reused.  For
+    # request traffic, the continuous-batching engine coalesces pending
+    # requests by plan; singletons share the smallest ladder bucket, so
+    # a stream of 1-query calls never retraces.
+    engine = QueryEngine(index, default_k=10, default_ef=64)
+    engine.warmup()
+    for q in queries[:20]:
+        engine.search(q)                      # 20 singleton requests
+    rep = engine.stats_report()
+    print(f"engine: {rep['requests']} requests, "
+          f"plans compiled={rep['plan_plans_compiled']}, "
+          f"hit rate={rep['plan_hit_rate']:.2f}, "
+          f"steady retraces={rep['plan_retraces']}")
 
 
 if __name__ == "__main__":

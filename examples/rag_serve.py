@@ -19,7 +19,12 @@ from repro.core.index import QuIVerIndex
 from repro.core.vamana import BuildParams
 from repro.filter import Any
 from repro.models.model import build_model
-from repro.serve.engine import Retriever, ServeEngine, mean_pool_embedder
+from repro.serve.engine import (
+    QueryEngine,
+    Retriever,
+    ServeEngine,
+    mean_pool_embedder,
+)
 
 
 def main():
@@ -44,13 +49,20 @@ def main():
     print(f"indexed {n_docs} docs; "
           f"hot={index.memory_breakdown()['hot_total_bytes']/1024:.0f} KB")
 
-    # 3. serve with and without retrieval
+    # 3. serve with and without retrieval.  The retriever routes its
+    # searches through a QueryEngine (DESIGN.md §11): lookups enter the
+    # admission queue, coalesce with any other in-flight request, and
+    # reuse one compiled plan per (k, ef, filter) config — a stream of
+    # single-prompt RAG calls never retraces.
     engine = ServeEngine(bundle, params, max_seq=128)
     prompts = rng.integers(0, cfg.vocab_size, (4, 12)).astype(np.int32)
 
+    query_engine = QueryEngine(index, default_k=2, default_ef=32)
+    query_engine.warmup(configs=({"k": 2, "ef": 32},))
     plain = engine.generate(prompts, max_new=8)
     retriever = Retriever(index=index, doc_tokens=corpus,
-                          embed_fn=embed_fn, k=2, ef=32)
+                          embed_fn=embed_fn, k=2, ef=32,
+                          engine=query_engine)
     augmented = engine.generate(prompts, max_new=8, retriever=retriever)
 
     print("plain generation     :", plain[0].tolist())
@@ -68,7 +80,7 @@ def main():
 
     de_retriever = Retriever(index=index, doc_tokens=corpus,
                              embed_fn=embed_fn, k=2, ef=32,
-                             filter=LANGS["de"])
+                             filter=LANGS["de"], engine=query_engine)
     de_out = engine.generate(prompts, max_new=8, retriever=de_retriever)
     hits, _ = index.search(jnp.asarray(doc_emb[:4]), k=2, ef=32,
                            filter=LANGS["de"])
@@ -81,6 +93,14 @@ def main():
     assert all(doc_lang[h] != LANGS["de"] for h in hits_ef.ravel()
                if h >= 0)
     print("en|fr hits            :", hits_ef.tolist())
+
+    # 5. the serving ledger: every retrieval above went through the
+    # admission queue — distinct (k, ef, filter) configs each compiled
+    # exactly once, then reused
+    rep = query_engine.stats_report()
+    print(f"query engine          : {rep['requests']} requests, "
+          f"{rep['plan_plans_compiled']} plans compiled, "
+          f"steady retraces={rep['plan_retraces']}")
 
 
 if __name__ == "__main__":

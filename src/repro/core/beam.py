@@ -204,6 +204,12 @@ def beam_search(
     from a parallel valid-only result list, so tombstoned and
     non-matching nodes never surface.
     """
+    # lowering counter (repro.plan.trace): this body only runs when jax
+    # traces it, so the bump counts compilations, not calls.  Imported
+    # lazily — trace time is after import time, and beam must not pull
+    # the plan package in at module scope.
+    from repro.plan.trace import note_trace
+    note_trace("beam_search")
     r = adjacency.shape[1]
     max_hops = max_hops or (4 * ef + 128)
     assert 1 <= expand <= ef, (expand, ef)

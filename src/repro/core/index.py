@@ -25,7 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bq
-from repro.core.beam import (
+
+# bucket-ladder + escalation-driver re-exports: pre-plan callers import
+# these from here (the beam module stays the one owner)
+from repro.core.beam import (  # noqa: F401
     batch_bucket,
     batched_beam_search,
     beam_margin,
@@ -37,19 +40,14 @@ from repro.core.vamana import BuildParams, BuildStats, build_graph
 from repro.filter import (
     DEFAULT_SELECTIVITY_FLOOR,
     LabelStore,
-    brute_force_topk,
     build_label_entries,
-    entry_label,
-    estimate_selectivity,
-    route,
-    validate,
-    widened_ef,
 )
+from repro.plan.cache import PlanCache
+from repro.plan.planner import resolve_plan
 from repro.probe import (
     CompatibilityReport,
     NavPolicy,
     probe_corpus,
-    resolve_schedule,
     select_policy,
 )
 
@@ -127,6 +125,12 @@ class QuIVerIndex:
     _backends: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+    # compiled query plans (repro.plan, DESIGN.md §11): one cache per
+    # index; every distinct plan jit-compiles exactly once and serving
+    # only feeds the compiled set
+    _plan_cache: PlanCache | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def backend(self, kind: NavKind | None = None) -> MetricSpace:
         """The metric backend for ``kind`` (default: the index's own)."""
@@ -136,6 +140,13 @@ class QuIVerIndex:
                 kind, MetricArrays(sigs=self.sigs, vectors=self.vectors)
             )
         return self._backends[kind]
+
+    @property
+    def plans(self) -> PlanCache:
+        """The index's compiled-plan cache (created on first use)."""
+        if self._plan_cache is None:
+            self._plan_cache = PlanCache(self)
+        return self._plan_cache
 
     # -- construction ------------------------------------------------------
 
@@ -278,83 +289,20 @@ class QuIVerIndex:
         the floor the match set is brute-forced exactly.  Adaptive
         escalation composes with the graph route (the escalated pass
         keeps the predicate mask); the brute route is already exact.
+
+        The whole call lowers to a compiled :class:`~repro.plan.QueryPlan`
+        (DESIGN.md §11): the nav ladder, the filter route and the
+        escalation schedule are resolved *once* into a frozen plan, and
+        the index's :class:`~repro.plan.PlanCache` compiles each
+        distinct plan exactly once — repeated calls with the same
+        configuration only feed cached executables.
         """
-        queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
-        backend = self.backend(nav)
-        ef, adaptive, sched = resolve_schedule(self.policy, nav, ef,
-                                               adaptive)
-        # signatures were encoded from rotated vectors, so sig-based
-        # backends need rotated queries; the float32 backend holds the
-        # unrotated cold vectors and must see the queries unrotated too.
-        enc_in = queries
-        if self.rotation is not None and backend.kind != "float32":
-            enc_in = queries @ self.rotation
-        reprs = backend.encode_queries(enc_in)
-        n = self.sigs.words.shape[0]
-
-        result_valid = None
-        start = jnp.int32(self.medoid)
-        ef_run = ef
-        if filter is not None:
-            if self.labels is None:
-                raise ValueError(
-                    "filtered search needs labels: attach_labels() first"
-                )
-            expr = validate(filter, self.labels.n_labels)
-            count_fn = self.labels.count_fn()
-            sel = estimate_selectivity(expr, count_fn, n)
-            mask = self.labels.mask(expr)
-            if route(sel, selectivity_floor) == "brute":
-                # the popcount estimate is a bound, not a measurement
-                # (Not() of a union bound can underestimate badly);
-                # verify with the exact mask popcount before committing
-                # to materializing the match set
-                match = np.nonzero(np.asarray(mask))[0]
-                sel = len(match) / max(n, 1)
-                if route(sel, selectivity_floor) == "brute":
-                    if rerank and self.vectors is not None:
-                        return brute_force_topk(
-                            queries, match, k, vectors=self.vectors
-                        )
-                    return brute_force_topk(
-                        queries, match, k, vectors=None, backend=backend,
-                        reprs=reprs,
-                    )
-            result_valid = mask
-            ef_run = widened_ef(ef, sel, selectivity_floor, n)
-            lbl = entry_label(expr, count_fn)
-            if lbl is not None and self.labels.entries[lbl] >= 0:
-                start = jnp.int32(int(self.labels.entries[lbl]))
-
-        def run(reprs_r, queries_r, ef_r, want_margin):
-            out_ids, out_scores, out_margin = [], [], []
-            for s in range(0, reprs_r.shape[0], query_batch):
-                rep = reprs_r[s:s + query_batch]
-                q = queries_r[s:s + query_batch]
-                real = rep.shape[0]
-                bucket = batch_bucket(real, query_batch)
-                res = batched_beam_search(
-                    pad_rows(rep, bucket), self.adjacency, start,
-                    dist_fn=backend.dist_fn, ef=ef_r, n=n, expand=expand,
-                    result_valid=result_valid,
-                )
-                ids, scores = _rerank(
-                    res.ids, res.dists, pad_rows(q, bucket),
-                    self.vectors if rerank else None, k,
-                )
-                out_ids.append(np.asarray(ids[:real]))
-                out_scores.append(np.asarray(scores[:real]))
-                if want_margin:
-                    out_margin.append(np.asarray(beam_margin(
-                        res.dists, k, backend.neutral_dist
-                    )[:real]))
-            return (np.concatenate(out_ids), np.concatenate(out_scores),
-                    np.concatenate(out_margin) if want_margin else None)
-
-        return escalated_search(
-            run, reprs, queries, ef_run, adaptive=adaptive,
-            margin_thr=sched.escalate_margin, mult=sched.escalate_mult,
+        plan, ctx = resolve_plan(
+            self, k=k, ef=ef, rerank=rerank, nav=nav, expand=expand,
+            query_batch=query_batch, filter=filter,
+            selectivity_floor=selectivity_floor, adaptive=adaptive,
         )
+        return self.plans.run(plan, ctx, queries)
 
     # -- accounting (paper Table 2) -----------------------------------------
 
@@ -454,6 +402,8 @@ def rerank_f32(beam_ids, queries, vectors, k):
     — their similarity is -inf, so they can only surface as trailing -1
     ids when fewer than k valid candidates exist.
     """
+    from repro.plan.trace import note_trace
+    note_trace("rerank_f32")
     safe = jnp.maximum(beam_ids, 0)
     cand = vectors[safe]                                # (Q, ef, D)
     sims = jnp.einsum("qd,qed->qe", queries, cand)
@@ -470,6 +420,8 @@ def topk_by_dist(beam_ids, beam_dists, k):
     (the beam backend's own scale — e.g. ``sim - 4D`` in [-8D, 0] for
     ``bq2``, negated Hamming for ``bq1``), NOT cosine.  Larger is
     better, but the scale is not comparable to :func:`rerank_f32`."""
+    from repro.plan.trace import note_trace
+    note_trace("topk_by_dist")
     scores, pos = jax.lax.top_k(-beam_dists, k)
     ids = jnp.take_along_axis(beam_ids, pos, axis=-1)
     return ids, scores

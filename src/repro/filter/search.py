@@ -73,6 +73,8 @@ def _pad_pow2(ids: np.ndarray, lo: int = 64) -> np.ndarray:
 @functools.partial(jax.jit, static_argnames=("k",))
 def _brute_cosine(queries, vectors, match_ids, k):
     """Exact cosine top-k over a -1-padded match-id list."""
+    from repro.plan.trace import note_trace
+    note_trace("brute_cosine")
     safe = jnp.maximum(match_ids, 0)
     cand = vectors[safe]                               # (M, D)
     sims = queries @ cand.T                            # (Q, M)

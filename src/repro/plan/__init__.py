@@ -1,0 +1,28 @@
+"""Compiled query plans (DESIGN.md §11).
+
+The serving stack's three per-request decision points — nav ladder,
+filter routing, adaptive escalation — collapse into one ahead-of-time
+resolved :class:`QueryPlan`:
+
+* :func:`resolve_plan` — (policy, predicate selectivity band, caller
+  args) -> frozen, hashable plan + dynamic :class:`PlanContext`;
+* :class:`PlanCache` — jit-compiles each distinct plan exactly once
+  (escalation is the same plan's second stage) and reuses it across
+  requests;
+* ``repro.plan.trace`` — jit lowering counters behind the
+  "steady-state retraces == 0" serving guarantee.
+"""
+
+from repro.plan import trace
+from repro.plan.plan import PlanContext, QueryPlan
+from repro.plan.planner import resolve_plan
+from repro.plan.cache import PendingResult, PlanCache
+
+__all__ = [
+    "PendingResult",
+    "PlanCache",
+    "PlanContext",
+    "QueryPlan",
+    "resolve_plan",
+    "trace",
+]

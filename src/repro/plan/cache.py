@@ -1,0 +1,282 @@
+"""PlanCache — compile each distinct QueryPlan exactly once, then feed it.
+
+One cache per index.  For every :class:`~repro.plan.plan.QueryPlan` the
+cache builds a single fused program — beam search + rerank + margin in
+one ``jit`` (per-query-bucket shapes handled by jax's own shape
+caching, bounded by the bucket ladder) — and every later request with
+the same plan reuses it.  Adaptive escalation is the *second stage of
+the same compiled plan*: ``plan.escalated()`` is just another plan in
+the cache, precompiled by :meth:`warmup`, so the tight-margin re-run
+dispatches a cached executable instead of retracing a fresh call-site
+combination the way the legacy ``escalated_search`` driver could.
+
+Trace accounting rides ``repro.plan.trace``: each program is a
+``counting_jit`` under this cache's prefix, so
+``report()["retraces"]`` is exactly "trace events beyond the first per
+(plan, bucket)" — the number the serve benchmark pins to zero in
+steady state.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam import (
+    batch_bucket,
+    batched_beam_search,
+    beam_margin,
+    pad_rows,
+)
+from repro.plan import trace
+from repro.plan.plan import PlanContext, QueryPlan
+
+_CACHE_IDS = itertools.count()
+
+
+def _normalize(x: jnp.ndarray) -> jnp.ndarray:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+class PendingResult:
+    """In-flight device results of one launched plan: per-chunk device
+    arrays plus splice metadata.  ``PlanCache.finalize`` syncs them to
+    host and runs the escalation stage if the plan asks for one.  The
+    split exists so the serve engine can overlap the next batch's
+    host→device transfer with this batch's compute (double buffering).
+    """
+
+    __slots__ = ("plan", "ctx", "queries", "reprs", "chunks")
+
+    def __init__(self, plan, ctx, queries, reprs, chunks):
+        self.plan = plan
+        self.ctx = ctx
+        self.queries = queries       # (Q, D) normalized, device
+        self.reprs = reprs           # encoded queries, device
+        self.chunks = chunks         # [(ids, scores, margins, real), ...]
+
+
+class PlanCache:
+    """Compiled-executable cache keyed by :class:`QueryPlan`."""
+
+    def __init__(self, index):
+        self._index = index
+        self._programs: dict[QueryPlan, object] = {}
+        # (plan, bucket) pairs that have executed at least once — the
+        # closed set of compiled shapes; misses == first-time pairs
+        self._seen: set[tuple[QueryPlan, int]] = set()
+        self._tag = f"plan[{next(_CACHE_IDS)}]:"
+        self.hits = 0
+        self.misses = 0
+        self.executions = 0
+
+    # -- program construction ---------------------------------------------
+
+    def program(self, plan: QueryPlan):
+        """The compiled program for ``plan`` (built exactly once)."""
+        if plan not in self._programs:
+            self._programs[plan] = self._build(plan)
+        return self._programs[plan]
+
+    def _build(self, plan: QueryPlan):
+        if plan.route != "graph":
+            raise ValueError("only graph plans compile; brute plans "
+                             "run through filter.brute_force_topk")
+        index = self._index
+        backend = index.backend(plan.nav)
+        dist_fn = backend.dist_fn
+        neutral = backend.neutral_dist
+        n = index.sigs.words.shape[0]
+        # lazy: core.index imports this module at its own top level
+        from repro.core.index import rerank
+
+        if plan.filtered:
+            def program(reprs, queries, adjacency, vectors, start,
+                        result_valid):
+                res = batched_beam_search(
+                    reprs, adjacency, start, dist_fn=dist_fn, ef=plan.ef,
+                    n=n, expand=plan.expand, result_valid=result_valid,
+                )
+                ids, scores = rerank(res.ids, res.dists, queries,
+                                     vectors, plan.k)
+                margins = beam_margin(res.dists, plan.k, neutral)
+                return ids, scores, margins
+        else:
+            def program(reprs, queries, adjacency, vectors, start):
+                res = batched_beam_search(
+                    reprs, adjacency, start, dist_fn=dist_fn, ef=plan.ef,
+                    n=n, expand=plan.expand,
+                )
+                ids, scores = rerank(res.ids, res.dists, queries,
+                                     vectors, plan.k)
+                margins = beam_margin(res.dists, plan.k, neutral)
+                return ids, scores, margins
+
+        return trace.counting_jit(
+            program, name=self._tag + plan.signature()
+        )
+
+    # -- query encoding ----------------------------------------------------
+
+    def encode(self, plan: QueryPlan, queries: jnp.ndarray) -> jnp.ndarray:
+        """Normalized float32 queries -> the plan's beam representation
+        (rotation applied for signature-space navigation)."""
+        index = self._index
+        backend = index.backend(plan.nav)
+        enc_in = queries
+        if index.rotation is not None and backend.kind != "float32":
+            enc_in = queries @ index.rotation
+        return backend.encode_queries(enc_in)
+
+    # -- execution ---------------------------------------------------------
+
+    def launch(
+        self,
+        plan: QueryPlan,
+        ctx: PlanContext,
+        queries: jnp.ndarray,
+        *,
+        record: bool = True,
+    ) -> PendingResult:
+        """Dispatch ``queries`` through ``plan`` without waiting.
+
+        Queries are normalized here; chunks follow the bucket ladder
+        (``batch_bucket``) so tail and singleton batches land on the
+        small closed set of padded shapes.  Returns device-side results
+        (jax async dispatch: compute proceeds while the host goes on to
+        stage the next batch).
+        """
+        queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
+        if queries.ndim == 1:
+            queries = queries[None]
+        if plan.route == "brute":
+            return PendingResult(plan, ctx, queries, None, None)
+        index = self._index
+        prog = self.program(plan)
+        reprs = self.encode(plan, queries)
+        vectors = index.vectors if plan.rerank else None
+        start = jnp.int32(ctx.start)
+        chunks = []
+        for s in range(0, queries.shape[0], plan.query_batch):
+            rep = reprs[s:s + plan.query_batch]
+            q = queries[s:s + plan.query_batch]
+            real = rep.shape[0]
+            bucket = batch_bucket(real, plan.query_batch)
+            if record:
+                self.executions += 1
+                if (plan, bucket) in self._seen:
+                    self.hits += 1
+                else:
+                    self.misses += 1
+            self._seen.add((plan, bucket))
+            args = (pad_rows(rep, bucket), pad_rows(q, bucket),
+                    index.adjacency, vectors, start)
+            if plan.filtered:
+                args += (ctx.result_valid,)
+            ids, scores, margins = prog(*args)
+            chunks.append((ids, scores, margins, real))
+        return PendingResult(plan, ctx, queries, reprs, chunks)
+
+    def finalize(
+        self, pending: PendingResult
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Sync a launched plan to host and run its second (escalation)
+        stage where margins demand one."""
+        plan, ctx = pending.plan, pending.ctx
+        if plan.route == "brute":
+            return self._run_brute(plan, ctx, pending.queries)
+        out_ids, out_scores, out_margin = [], [], []
+        for ids, scores, margins, real in pending.chunks:
+            out_ids.append(np.asarray(ids[:real]))
+            out_scores.append(np.asarray(scores[:real]))
+            out_margin.append(np.asarray(margins[:real]))
+        all_ids = np.concatenate(out_ids)
+        all_scores = np.concatenate(out_scores)
+        if plan.adaptive:
+            margins = np.concatenate(out_margin)
+            esc = np.nonzero(margins < plan.escalate_margin)[0]
+            if esc.size:
+                take = jnp.asarray(esc.astype(np.int32))
+                esc_ids, esc_scores = self.finalize(self.launch(
+                    plan.escalated(), ctx, pending.queries[take]
+                ))
+                all_ids[esc] = esc_ids
+                all_scores[esc] = esc_scores
+        return all_ids, all_scores
+
+    def run(
+        self, plan: QueryPlan, ctx: PlanContext, queries
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """launch + finalize: the synchronous per-call entry
+        (``QuIVerIndex.search`` lowers to exactly this)."""
+        return self.finalize(self.launch(plan, ctx, queries))
+
+    def _run_brute(self, plan, ctx, queries):
+        # exact top-k over the materialized match set; already a
+        # shape-bounded jit (match lists pad to powers of two)
+        from repro.filter.search import brute_force_topk
+
+        index = self._index
+        if plan.rerank:
+            return brute_force_topk(
+                queries, ctx.match_ids, plan.k, vectors=index.vectors
+            )
+        backend = index.backend(plan.nav)
+        return brute_force_topk(
+            queries, ctx.match_ids, plan.k, vectors=None,
+            backend=backend, reprs=self.encode(plan, queries),
+        )
+
+    # -- warmup & accounting ----------------------------------------------
+
+    def warmup(
+        self,
+        plan: QueryPlan,
+        ctx: PlanContext | None = None,
+        *,
+        buckets: tuple[int, ...] = (8,),
+        with_escalation: bool = True,
+    ) -> int:
+        """Precompile ``plan`` (and its escalation stage) for the given
+        query buckets; returns how many programs were exercised.
+        Warmup traffic is excluded from hit/miss stats."""
+        if plan.route == "brute":
+            return 0
+        if ctx is None:
+            ctx = PlanContext(start=int(self._index.medoid))
+            if plan.filtered:
+                n = self._index.sigs.words.shape[0]
+                ctx.result_valid = jnp.ones((n,), dtype=jnp.bool_)
+        dim = self._index.sigs.dim
+        ran = 0
+        stages = [plan]
+        if with_escalation and plan.adaptive:
+            stages.append(plan.escalated())
+        for stage in stages:
+            for b in buckets:
+                q = jnp.zeros((min(b, stage.query_batch), dim),
+                              dtype=jnp.float32)
+                self.finalize(self.launch(stage, ctx, q, record=False))
+                ran += 1
+        return ran
+
+    def report(self) -> dict:
+        """``memory_breakdown``-style serving-compilation report."""
+        tr = trace.trace_report(self._tag)
+        lookups = self.hits + self.misses
+        return {
+            "plans_compiled": len(self._programs),
+            "plan_shapes": len(self._seen),
+            "executions": self.executions,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / lookups if lookups else 1.0,
+            "trace_events": tr["total_traces"],
+            "retraces": tr["total_traces"] - len(self._seen),
+        }
+
+    def trace_prefix(self) -> str:
+        """This cache's trace-counter namespace (for snapshots)."""
+        return self._tag

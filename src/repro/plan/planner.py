@@ -1,0 +1,113 @@
+"""resolve_plan — collapse the three serve-time decision points.
+
+Before the plan refactor, every search call re-decided, inline and
+independently:
+
+1. the **nav ladder** — which metric rung and ef/rerank schedule the
+   index's :class:`~repro.probe.NavPolicy` prescribes
+   (``core/index.py``);
+2. the **filter route** — widened-ef graph traversal vs exact brute
+   force over the match set, from the predicate's estimated
+   selectivity (``filter/search.py``);
+3. the **escalation schedule** — whether tight-margin queries re-run
+   with a wider beam (``core/beam.py::escalated_search``).
+
+:func:`resolve_plan` makes them one decision with one output: a frozen
+:class:`~repro.plan.plan.QueryPlan` (everything jit-static) plus a
+:class:`~repro.plan.plan.PlanContext` (the dynamic arrays — entry
+point, predicate mask, brute match set).  The routing *policies* stay
+where they live today (``resolve_schedule``, ``route``/``widened_ef``/
+``entry_label``) — this module only owns their composition, so a plan
+is always exactly what the legacy inline path would have decided.
+
+Selectivity enters the plan only through ``widened_ef``'s quantized
+widening multiple, so predicate drift moves the plan key in bounded
+steps (a "selectivity band"), not per-popcount.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.filter import (
+    DEFAULT_SELECTIVITY_FLOOR,
+    entry_label,
+    estimate_selectivity,
+    route,
+    validate,
+    widened_ef,
+)
+from repro.plan.plan import PlanContext, QueryPlan
+from repro.probe import resolve_schedule
+
+
+def resolve_plan(
+    index,
+    *,
+    k: int = 10,
+    ef: int = 64,
+    rerank: bool = True,
+    nav: str | None = None,
+    expand: int = 1,
+    query_batch: int = 256,
+    filter=None,
+    selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR,
+    adaptive: bool | None = None,
+) -> tuple[QueryPlan, PlanContext]:
+    """Resolve one search call to (plan, context) for ``index``.
+
+    ``index`` is any immutable-index-shaped object: ``sigs``,
+    ``medoid``, ``vectors``, ``labels``, ``policy``, ``metric_kind``.
+    Same (policy, filter selectivity band, ef, k, nav, expand) in →
+    equal (hash-identical) plan out: the PlanCache key.
+    """
+    n = index.sigs.words.shape[0]
+    ef, adaptive, sched = resolve_schedule(index.policy, nav, ef, adaptive)
+    kind = nav or index.metric_kind
+    do_rerank = rerank and index.vectors is not None
+
+    ctx = PlanContext(start=int(index.medoid))
+    filtered = False
+    ef_run = ef
+    if filter is not None:
+        if index.labels is None:
+            raise ValueError(
+                "filtered search needs labels: attach_labels() first"
+            )
+        expr = validate(filter, index.labels.n_labels)
+        count_fn = index.labels.count_fn()
+        sel = estimate_selectivity(expr, count_fn, n)
+        mask = index.labels.mask(expr)
+        if route(sel, selectivity_floor) == "brute":
+            # the popcount estimate is a bound, not a measurement
+            # (Not() of a union bound can underestimate badly); verify
+            # with the exact mask popcount before committing to
+            # materializing the match set
+            match = np.nonzero(np.asarray(mask))[0]
+            sel = len(match) / max(n, 1)
+            if route(sel, selectivity_floor) == "brute":
+                ctx.match_ids = match.astype(np.int32)
+                ctx.selectivity = sel
+                return (
+                    QueryPlan(
+                        nav=kind, k=k, ef=max(ef, k), expand=expand,
+                        rerank=do_rerank, route="brute",
+                        query_batch=query_batch,
+                    ),
+                    ctx,
+                )
+        filtered = True
+        ctx.result_valid = mask
+        ctx.selectivity = sel
+        ef_run = widened_ef(ef, sel, selectivity_floor, n)
+        lbl = entry_label(expr, count_fn)
+        if lbl is not None and index.labels.entries[lbl] >= 0:
+            ctx.start = int(index.labels.entries[lbl])
+
+    plan = QueryPlan(
+        nav=kind, k=k, ef=ef_run, expand=expand, rerank=do_rerank,
+        route="graph", filtered=filtered, adaptive=adaptive,
+        escalate_margin=sched.escalate_margin,
+        escalate_mult=sched.escalate_mult, query_batch=query_batch,
+    )
+    return plan, ctx

@@ -1,0 +1,117 @@
+"""Retrace accounting: count ``jax.jit`` trace events per named program.
+
+A jitted function's Python body only executes when jax *traces* it — a
+cache miss on the (function, abstract-shapes, static-args) key.  So a
+counter bumped inside the body is exactly a lowering counter: it moves
+on first compilation and on every retrace, and stays flat on cache
+hits.  ``counting_jit`` builds instrumented jits; ``note_trace`` is the
+raw hook for already-jitted functions (``repro.core.beam.beam_search``
+notes itself).
+
+Steady-state serving must not retrace (ROADMAP: the serving process
+compiles a small closed set of plans once and then only feeds them), so
+the serve benchmark and tier-1 tests pin that down with
+:func:`assert_no_retrace` / :func:`snapshot` deltas, and
+:func:`trace_report` exposes the counters ``memory_breakdown``-style.
+
+This module is import-cycle-free on purpose (no ``repro.*`` imports):
+anything — core, filter, serve — may note traces into it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+
+import jax
+
+_LOCK = threading.Lock()
+_COUNTS: dict[str, int] = {}
+
+
+def note_trace(name: str) -> None:
+    """Record one trace event for program ``name`` (call this from
+    *inside* a jitted function's Python body)."""
+    with _LOCK:
+        _COUNTS[name] = _COUNTS.get(name, 0) + 1
+
+
+def counting_jit(fun, *, name: str | None = None, **jit_kwargs):
+    """``jax.jit(fun)`` whose trace events are counted under ``name``
+    (default: the function's ``__name__``)."""
+    tag = name or getattr(fun, "__name__", "anonymous")
+
+    @functools.wraps(fun)
+    def noted(*args, **kwargs):
+        note_trace(tag)
+        return fun(*args, **kwargs)
+
+    return jax.jit(noted, **jit_kwargs)
+
+
+def trace_counts(prefix: str = "") -> dict[str, int]:
+    """Per-program trace counts (filtered to names under ``prefix``)."""
+    with _LOCK:
+        return {k: v for k, v in _COUNTS.items() if k.startswith(prefix)}
+
+
+def total_traces(prefix: str = "") -> int:
+    return sum(trace_counts(prefix).values())
+
+
+def reset(prefix: str = "") -> None:
+    with _LOCK:
+        for k in [k for k in _COUNTS if k.startswith(prefix)]:
+            del _COUNTS[k]
+
+
+def trace_report(prefix: str = "") -> dict:
+    """``memory_breakdown``-style report: per-program trace counts plus
+    the total — diff two of these across a serving window to get the
+    window's retrace count."""
+    counts = trace_counts(prefix)
+    return {
+        "programs": dict(sorted(counts.items())),
+        "distinct_programs": len(counts),
+        "total_traces": sum(counts.values()),
+    }
+
+
+class TraceSnapshot:
+    """Point-in-time counter snapshot; ``delta()`` is the traces since."""
+
+    def __init__(self, prefix: str = ""):
+        self.prefix = prefix
+        self._base = trace_counts(prefix)
+
+    def delta(self) -> int:
+        now = trace_counts(self.prefix)
+        return sum(now.values()) - sum(self._base.values())
+
+    def delta_by_program(self) -> dict[str, int]:
+        now = trace_counts(self.prefix)
+        out = {}
+        for k, v in now.items():
+            d = v - self._base.get(k, 0)
+            if d:
+                out[k] = d
+        return out
+
+
+def snapshot(prefix: str = "") -> TraceSnapshot:
+    return TraceSnapshot(prefix)
+
+
+@contextlib.contextmanager
+def assert_no_retrace(prefix: str = "", what: str = "steady state"):
+    """Context manager asserting zero trace events inside the block —
+    the serve benchmark's and tier-1's "steady-state retraces == 0"."""
+    snap = snapshot(prefix)
+    yield snap
+    d = snap.delta()
+    if d:
+        raise AssertionError(
+            f"{what}: expected 0 retraces, got {d}: "
+            f"{snap.delta_by_program()}"
+        )

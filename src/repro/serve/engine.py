@@ -1,26 +1,337 @@
-"""Batched serving engine: prefill/decode loop + QuIVer retrieval (RAG).
+"""Serving engines: continuous-batching QuIVer search + LM generation.
 
-The engine drives any decoder-family ``ModelBundle``:
+Two engines live here:
 
-    engine = ServeEngine(bundle, params, max_seq=...)
-    out = engine.generate(prompts)                   # batched greedy
-    out = engine.generate(prompts, retriever=quiver) # retrieval-augmented
+* :class:`QueryEngine` — the retrieval serving path (DESIGN.md §11).
+  A continuous-batching request pipeline over a built index: an
+  admission queue coalesces pending requests by *compiled query plan*
+  (``repro.plan``), pads the merged batch up the bucket ladder, overlaps
+  host→device transfer of the next group with compute of the current
+  one (jax async dispatch double-buffering), and maps per-request
+  deadline budgets onto the plan's ef schedule — degrading ef down the
+  plan ladder before ever dropping a request.  A warmed engine serves
+  from a closed set of compiled programs: steady-state retraces == 0.
+
+      engine = QueryEngine(index)
+      engine.warmup()
+      t = engine.submit(queries, k=10, ef=64, deadline_ms=50)
+      engine.pump()                    # one admission window
+      ids, scores = engine.result(t)
+      ids, scores = engine.search(q)   # submit+pump+wait convenience
+
+* :class:`ServeEngine` — batched LM generation (prefill/decode loop),
+  optionally retrieval-augmented through a :class:`Retriever`.
 
 Retrieval integration (DESIGN.md §4): the prompt's mean-pooled embedding
 queries a QuIVer index; the top-k neighbour *token prefixes* are
 prepended to the prompt before prefill — the hot path of retrieval is
 the paper's XOR/popcount beam search, so augmentation adds microseconds
-of index time, not model FLOPs.
+of index time, not model FLOPs.  A Retriever given an ``engine`` routes
+its searches through the admission queue, so RAG lookups coalesce with
+every other in-flight request (and singleton prompts ride the smallest
+ladder bucket instead of retracing per call shape).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.plan import resolve_plan, trace
+from repro.plan.plan import PlanContext, QueryPlan
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """One admitted search request (a row range of a coalesced batch)."""
+
+    id: int
+    queries: np.ndarray                # (q, D) float32
+    kwargs: dict                       # resolve_plan arguments
+    filter_key: Any                    # hashable grouping key for filter
+    submitted: float                   # clock() at submit
+    deadline: float | None             # absolute clock() budget, or None
+    status: str = "pending"            # pending | done | dropped
+    degraded: int = 0                  # deadline rungs walked down
+    plan: QueryPlan | None = None      # the plan that actually served it
+    latency: float | None = None       # seconds, admission -> completion
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0
+    queries: int = 0
+    windows: int = 0                   # pump() calls that did work
+    batches: int = 0                   # coalesced plan-group launches
+    done: int = 0
+    dropped: int = 0
+    degraded: int = 0                  # requests served below asked ef
+    latencies: list = dataclasses.field(default_factory=list)
+
+
+class QueryEngine:
+    """Continuous-batching search serving over a ``QuIVerIndex``.
+
+    The engine is deliberately synchronous-pumped: callers ``submit``
+    requests and ``pump`` admission windows (a thread, an asyncio task
+    or a benchmark's load loop can drive it).  Each window:
+
+    1. resolves every pending request to its :class:`QueryPlan` (the
+       ahead-of-time decision point — nav ladder, filter route,
+       escalation schedule);
+    2. walks deadline-pressed requests down the plan's ef-degradation
+       ladder (brute-route plans are exact and never degrade; requests
+       already past deadline are dropped);
+    3. coalesces requests group-by-plan into one batch each, padded up
+       the bucket ladder — singletons land in the smallest bucket, so
+       repeated 1-query traffic reuses one executable;
+    4. launches all groups before finalizing any (jax async dispatch:
+       group i+1's host→device transfer and compute overlap group i's
+       result sync — the double-buffering);
+    5. scatters results back to tickets and records latencies.
+
+    ``latency_slack``: a request is degraded when its remaining budget
+    is under ``latency_slack`` × the EWMA batch latency of its plan.
+    """
+
+    def __init__(
+        self,
+        index,
+        *,
+        query_batch: int = 256,
+        default_k: int = 10,
+        default_ef: int = 64,
+        latency_slack: float = 1.0,
+        ewma_alpha: float = 0.3,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.index = index
+        self.query_batch = query_batch
+        self.default_k = default_k
+        self.default_ef = default_ef
+        self.latency_slack = latency_slack
+        self.ewma_alpha = ewma_alpha
+        self.clock = clock
+        self.stats = EngineStats()
+        self._pending: list[QueryTicket] = []
+        self._tickets: dict[int, QueryTicket] = {}
+        self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._next_id = 0
+        self._lat_ewma: dict[QueryPlan, float] = {}
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(
+        self,
+        queries,
+        *,
+        k: int | None = None,
+        ef: int | None = None,
+        rerank: bool = True,
+        nav: str | None = None,
+        expand: int = 1,
+        filter=None,
+        adaptive: bool | None = None,
+        deadline_ms: float | None = None,
+    ) -> int:
+        """Queue a request; returns a ticket id for :meth:`result`."""
+        q = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+        now = self.clock()
+        t = QueryTicket(
+            id=self._next_id,
+            queries=q,
+            kwargs=dict(
+                k=k if k is not None else self.default_k,
+                ef=ef if ef is not None else self.default_ef,
+                rerank=rerank, nav=nav, expand=expand, filter=filter,
+                adaptive=adaptive, query_batch=self.query_batch,
+            ),
+            filter_key=filter,
+            submitted=now,
+            deadline=(now + deadline_ms / 1e3
+                      if deadline_ms is not None else None),
+        )
+        self._next_id += 1
+        self._pending.append(t)
+        self._tickets[t.id] = t
+        self.stats.requests += 1
+        self.stats.queries += len(q)
+        return t.id
+
+    # -- one admission window ----------------------------------------------
+
+    def pump(self) -> int:
+        """Serve every pending request in one admission window; returns
+        how many requests completed (dropped requests count)."""
+        if not self._pending:
+            return 0
+        admitted, self._pending = self._pending, []
+        self.stats.windows += 1
+        now = self.clock()
+
+        # 1+2: plan resolution + deadline degradation, group by plan
+        groups: dict[tuple, list] = {}
+        ctxs: dict[tuple, PlanContext] = {}
+        completed = 0
+        for t in admitted:
+            if t.deadline is not None and now > t.deadline:
+                self._finish_dropped(t)
+                completed += 1
+                continue
+            plan, ctx = resolve_plan(self.index, **t.kwargs)
+            if t.deadline is not None:
+                budget = t.deadline - now
+                while (plan.can_degrade()
+                       and self._estimate(plan)
+                       * self.latency_slack > budget):
+                    plan = plan.degraded()
+                    t.degraded += 1
+                if t.degraded:
+                    self.stats.degraded += 1
+            t.plan = plan
+            key = (plan, t.filter_key)
+            groups.setdefault(key, []).append(t)
+            ctxs.setdefault(key, ctx)
+
+        # 3+4: coalesce each group and launch all before finalizing any
+        # (async dispatch overlaps group i+1's transfer with group i)
+        launches = []
+        for key, tickets in groups.items():
+            plan = key[0]
+            qcat = np.concatenate([t.queries for t in tickets])
+            t0 = self.clock()
+            pending = self.index.plans.launch(plan, ctxs[key], qcat)
+            launches.append((plan, tickets, pending, t0))
+            self.stats.batches += 1
+
+        # 5: sync, scatter, account
+        for plan, tickets, pending, t0 in launches:
+            ids, scores = self.index.plans.finalize(pending)
+            t_done = self.clock()
+            self._observe(plan, t_done - t0)
+            row = 0
+            for t in tickets:
+                nq = len(t.queries)
+                self._results[t.id] = (ids[row:row + nq],
+                                       scores[row:row + nq])
+                row += nq
+                t.status = "done"
+                t.latency = t_done - t.submitted
+                self.stats.done += 1
+                self.stats.latencies.append(t.latency)
+                completed += 1
+        return completed
+
+    def _finish_dropped(self, t: QueryTicket) -> None:
+        k = t.kwargs["k"]
+        nq = len(t.queries)
+        self._results[t.id] = (
+            np.full((nq, k), -1, np.int32),
+            np.full((nq, k), -np.inf, np.float32),
+        )
+        t.status = "dropped"
+        t.latency = self.clock() - t.submitted
+        self.stats.dropped += 1
+
+    def _estimate(self, plan: QueryPlan) -> float:
+        """EWMA batch latency for ``plan`` (0.0 until first observed —
+        no degradation before the engine has evidence)."""
+        if plan in self._lat_ewma:
+            return self._lat_ewma[plan]
+        # unmeasured degraded rungs inherit the parent's estimate scaled
+        # by the beam ratio (latency is ~linear in ef)
+        for parent, lat in self._lat_ewma.items():
+            if (parent.nav == plan.nav and parent.route == plan.route
+                    and parent.filtered == plan.filtered
+                    and parent.k == plan.k):
+                return lat * plan.ef / max(parent.ef, 1)
+        return 0.0
+
+    def _observe(self, plan: QueryPlan, seconds: float) -> None:
+        prev = self._lat_ewma.get(plan)
+        a = self.ewma_alpha
+        self._lat_ewma[plan] = (
+            seconds if prev is None else a * seconds + (1 - a) * prev
+        )
+
+    # -- results -----------------------------------------------------------
+
+    def poll(self, ticket: int):
+        """(ids, scores) if the ticket completed, else None."""
+        return self._results.get(ticket)
+
+    def result(self, ticket: int):
+        """Block (pumping the queue) until ``ticket`` completes."""
+        while ticket not in self._results:
+            if not self.pump():
+                raise KeyError(f"unknown or lost ticket {ticket}")
+        return self._results.pop(ticket)
+
+    def ticket(self, ticket: int) -> QueryTicket:
+        return self._tickets[ticket]
+
+    def search(self, queries, **kwargs):
+        """Per-call convenience: submit + pump + wait.  Single queries
+        still ride the admission path, so they share the smallest
+        ladder bucket with every other singleton."""
+        return self.result(self.submit(queries, **kwargs))
+
+    # -- warmup & reporting ------------------------------------------------
+
+    def warmup(
+        self,
+        *,
+        buckets: tuple[int, ...] = (8,),
+        configs: tuple[dict, ...] = ({},),
+    ) -> int:
+        """Precompile the plans the engine expects to serve (default:
+        its default k/ef on the smallest bucket, escalation stage
+        included).  ``configs`` are extra submit-kwarg dicts to warm
+        (e.g. ``{"filter": 3}`` or ``{"ef": 32}``)."""
+        warmed = 0
+        for cfg in configs:
+            kw = dict(
+                k=self.default_k, ef=self.default_ef, rerank=True,
+                nav=None, expand=1, filter=None, adaptive=None,
+                query_batch=self.query_batch,
+            )
+            kw.update(cfg)
+            plan, ctx = resolve_plan(self.index, **kw)
+            warmed += self.index.plans.warmup(
+                plan, ctx if plan.filtered or plan.route == "brute"
+                else None, buckets=buckets,
+            )
+        return warmed
+
+    def stats_report(self) -> dict:
+        """``memory_breakdown``-style serving report: request counters,
+        latency percentiles, plan-cache behaviour, retraces."""
+        lat = np.asarray(self.stats.latencies, dtype=np.float64)
+        out = {
+            "requests": self.stats.requests,
+            "queries": self.stats.queries,
+            "windows": self.stats.windows,
+            "batches": self.stats.batches,
+            "done": self.stats.done,
+            "dropped": self.stats.dropped,
+            "degraded": self.stats.degraded,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size
+            else None,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size
+            else None,
+        }
+        out.update(
+            {f"plan_{k}": v for k, v in self.index.plans.report().items()}
+        )
+        out["trace_report"] = trace.trace_report(
+            self.index.plans.trace_prefix()
+        )
+        return out
 
 
 @dataclasses.dataclass
@@ -47,6 +358,12 @@ class Retriever:
     :class:`~repro.probe.NavPolicy` (auto-built indexes escalate
     tight-margin retrievals per query, DESIGN.md §10); pass True/False
     to force it per retriever.
+
+    ``engine`` (optional) is a :class:`QueryEngine` over the same
+    index: retrievals then go through the admission queue — coalescing
+    with concurrent requests, always padded up the bucket ladder — so a
+    stream of single-prompt RAG calls reuses one compiled plan instead
+    of retracing per call-site kwargs.
     """
     index: Any                      # QuIVerIndex | MutableQuIVerIndex
     doc_tokens: np.ndarray          # (n_docs, doc_len) int32
@@ -58,12 +375,15 @@ class Retriever:
     pad_token: int = 0
     filter: Any = None              # label predicate (repro.filter)
     adaptive: bool | None = None    # None: the index policy decides
+    engine: Any = None              # QueryEngine routing (optional)
 
     def augment(
         self, tokens: np.ndarray, *, filter=None
     ) -> np.ndarray:
         emb = np.asarray(self.embed_fn(jnp.asarray(tokens)))
-        ids, _ = self.index.search(
+        search = self.engine.search if self.engine is not None \
+            else self.index.search
+        ids, _ = search(
             jnp.asarray(emb), k=self.k, ef=self.ef, nav=self.nav,
             expand=self.expand, adaptive=self.adaptive,
             filter=filter if filter is not None else self.filter,

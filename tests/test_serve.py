@@ -1,0 +1,175 @@
+"""QueryEngine tests (DESIGN.md §11): admission coalescing, singleton
+bucket reuse, deadline degradation (and its brute-route bypass), drop
+semantics, and mixed filtered/unfiltered admission windows."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.data.datasets import make_dataset
+from repro.plan import resolve_plan, trace
+from repro.serve.engine import QueryEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+PARAMS = BuildParams(m=6, ef_construction=32, prune_pool=32, chunk=128)
+
+
+class FakeClock:
+    """Manually-advanced monotonic clock for deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@functools.lru_cache(maxsize=1)
+def _index():
+    base, queries = make_dataset("minilm-surrogate", n=800, queries=12)
+    idx = QuIVerIndex.build(jnp.asarray(base), PARAMS)
+    rng = np.random.default_rng(0)
+    member = np.stack(
+        [rng.random(len(base)) < p for p in (0.5, 0.01)], axis=1
+    )
+    idx.attach_labels(
+        [np.nonzero(m)[0].tolist() for m in member], n_labels=2
+    )
+    idx.build_label_entries(min_count=32)
+    return idx, np.asarray(queries, np.float32)
+
+
+def test_engine_matches_per_call_search():
+    idx, queries = _index()
+    engine = QueryEngine(idx, default_k=5, default_ef=32)
+    ids_e, sc_e = engine.search(queries[:6])
+    ids_d, sc_d = idx.search(jnp.asarray(queries[:6]), k=5, ef=32)
+    np.testing.assert_array_equal(ids_e, np.asarray(ids_d))
+    np.testing.assert_allclose(sc_e, np.asarray(sc_d), rtol=1e-6)
+
+
+def test_window_coalesces_same_plan_requests():
+    idx, queries = _index()
+    engine = QueryEngine(idx, default_k=5, default_ef=32)
+    t1 = engine.submit(queries[0])
+    t2 = engine.submit(queries[1:4])
+    t3 = engine.submit(queries[4:6])
+    assert engine.pump() == 3
+    assert engine.stats.windows == 1
+    assert engine.stats.batches == 1           # one plan -> one launch
+    ids_d, _ = idx.search(jnp.asarray(queries[:6]), k=5, ef=32)
+    ids_d = np.asarray(ids_d)
+    np.testing.assert_array_equal(engine.poll(t1)[0], ids_d[:1])
+    np.testing.assert_array_equal(engine.poll(t2)[0], ids_d[1:4])
+    np.testing.assert_array_equal(engine.poll(t3)[0], ids_d[4:6])
+
+
+def test_singleton_stream_reuses_smallest_bucket():
+    idx, queries = _index()
+    engine = QueryEngine(idx, default_k=5, default_ef=32)
+    engine.warmup(buckets=(8,))
+    with trace.assert_no_retrace(idx.plans.trace_prefix(),
+                                 "singleton request stream"):
+        for q in queries[:6]:
+            engine.search(q)                   # six 1-query requests
+    rep = engine.stats_report()
+    assert rep["plan_retraces"] == 0
+    assert rep["requests"] == 6 and rep["done"] == 6
+
+
+def test_deadline_degrades_ef_before_dropping():
+    idx, queries = _index()
+    clock = FakeClock()
+    engine = QueryEngine(idx, default_k=10, default_ef=64, clock=clock)
+    plan, _ = resolve_plan(idx, k=10, ef=64)
+    engine._observe(plan, 10.0)                # plan "measured" at 10 s
+    t = engine.submit(queries[:2], deadline_ms=1000)
+    engine.pump()
+    tk = engine.ticket(t)
+    assert tk.status == "done"                 # degraded, not dropped
+    assert tk.degraded == 2                    # 64 -> 32 -> 16 (floor: k)
+    assert tk.plan.ef == 16 and not tk.plan.adaptive
+    assert engine.stats.degraded == 1 and engine.stats.dropped == 0
+    # served at the degraded width, not the asked one
+    ids_d, _ = idx.search(jnp.asarray(queries[:2]), k=10, ef=16,
+                          adaptive=False)
+    np.testing.assert_array_equal(engine.poll(t)[0], np.asarray(ids_d))
+
+
+def test_brute_route_bypasses_degradation():
+    idx, queries = _index()
+    clock = FakeClock()
+    engine = QueryEngine(idx, default_k=5, default_ef=64, clock=clock)
+    # label 1 is ~1% selective -> exact brute route; give it a huge
+    # observed latency and a tight budget: it must neither degrade
+    # (exactness is not negotiable) nor drop (deadline not yet passed)
+    plan, _ = resolve_plan(idx, k=5, ef=64, filter=1)
+    assert plan.route == "brute"
+    engine._observe(plan, 10.0)
+    t = engine.submit(queries[:2], filter=1, deadline_ms=50)
+    engine.pump()
+    tk = engine.ticket(t)
+    assert tk.status == "done" and tk.degraded == 0
+    assert tk.plan.route == "brute"
+    ids_d, _ = idx.search(jnp.asarray(queries[:2]), k=5, ef=64, filter=1)
+    np.testing.assert_array_equal(engine.poll(t)[0], np.asarray(ids_d))
+
+
+def test_expired_request_is_dropped():
+    idx, queries = _index()
+    clock = FakeClock()
+    engine = QueryEngine(idx, default_k=5, default_ef=32, clock=clock)
+    t = engine.submit(queries[:2], deadline_ms=5)
+    clock.t = 1.0                              # budget long gone
+    engine.pump()
+    tk = engine.ticket(t)
+    assert tk.status == "dropped"
+    assert engine.stats.dropped == 1
+    ids, scores = engine.result(t)
+    assert (ids == -1).all() and np.isneginf(scores).all()
+
+
+def test_mixed_filtered_unfiltered_window():
+    """Regression: one admission window mixing plain, masked-graph and
+    brute-routed filtered requests must serve each through its own plan
+    group with per-request-correct results — and a second identical
+    window must be retrace-free."""
+    idx, queries = _index()
+    engine = QueryEngine(idx, default_k=5, default_ef=32)
+
+    def window():
+        ts = (engine.submit(queries[:3]),
+              engine.submit(queries[3:6], filter=0),
+              engine.submit(queries[6:9], filter=1),
+              engine.submit(queries[9:10], deadline_ms=60_000))
+        assert engine.pump() == 4
+        return ts
+
+    t_plain, t_graph, t_brute, t_dead = window()
+    assert engine.stats.windows == 1
+    # three plan groups: the undegraded deadline request coalesces
+    # into the plain group (same plan, same filter key)
+    assert engine.stats.batches == 3
+    assert engine.ticket(t_graph).plan.filtered
+    assert engine.ticket(t_brute).plan.route == "brute"
+    assert engine.ticket(t_dead).status == "done"
+
+    for t, (qs, kw) in {
+        t_plain: (queries[:3], {}),
+        t_graph: (queries[3:6], {"filter": 0}),
+        t_brute: (queries[6:9], {"filter": 1}),
+        t_dead: (queries[9:10], {}),
+    }.items():
+        ids_d, _ = idx.search(jnp.asarray(qs), k=5, ef=32, **kw)
+        np.testing.assert_array_equal(engine.poll(t)[0],
+                                      np.asarray(ids_d))
+
+    with trace.assert_no_retrace(idx.plans.trace_prefix(),
+                                 "second mixed window"):
+        window()
+    assert engine.stats_report()["plan_retraces"] == 0
