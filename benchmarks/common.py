@@ -5,6 +5,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import subprocess
 import time
 
 import jax.numpy as jnp
@@ -88,13 +89,48 @@ def emit(rows: list[dict], table: str):
         print(f"{r['name']},{us},{derived}")
 
 
-def write_bench_json(rows: list[dict], table: str) -> str:
+# bump when the BENCH_*.json payload shape changes incompatibly
+BENCH_SCHEMA_VERSION = 2
+
+
+def _git_sha() -> str | None:
+    """Current commit SHA for artifact provenance (None outside git)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=OUT_DIR.parents[1], capture_output=True, text=True,
+            timeout=10,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def provenance() -> dict:
+    """Who/what produced this artifact: git SHA, schema version, and an
+    echo of every ``REPRO_*`` env knob that shaped the run — so a
+    BENCH_*.json from six months ago answers "what exactly ran?" by
+    itself instead of via archaeology on CI logs."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "config": {
+            k: v for k, v in sorted(os.environ.items())
+            if k.startswith("REPRO_")
+        },
+    }
+
+
+def write_bench_json(rows: list[dict], table: str, extra: dict = None) -> str:
     """Record the suite's results as ``BENCH_<table>.json`` at the repo
     root — the machine-readable perf-trajectory artifact (one file per
     suite, overwritten per run; the git history is the trajectory).
 
     Each row keeps whatever the suite measured (recall/memory/...);
-    ``qps`` is derived from ``us_per_call`` where present.
+    ``qps`` is derived from ``us_per_call`` where present.  Every
+    payload is stamped with :func:`provenance`; ``extra`` merges
+    suite-specific top-level fields (e.g. per-tenant summaries).
     """
     out_rows = []
     for r in rows:
@@ -108,8 +144,11 @@ def write_bench_json(rows: list[dict], table: str) -> str:
         "bench_n": BENCH_N,
         "bench_q": BENCH_Q,
         "generated_unix": round(time.time(), 1),
+        "provenance": provenance(),
         "rows": out_rows,
     }
+    if extra:
+        payload.update(extra)
     path = OUT_DIR.parents[1] / f"BENCH_{table}.json"
     path.write_text(json.dumps(payload, indent=2) + "\n")
     return str(path)

@@ -1,0 +1,270 @@
+"""Multi-tenant chaos benchmark: SLOs, quotas and drift under churn.
+
+The scenario ISSUE 7 caps the telemetry layer with — three tenants on
+one :class:`~repro.serve.engine.QueryEngine` while a streaming corpus
+churns and (deliberately) drifts:
+
+* **acme** — the well-behaved tenant: a generous quota, a mix of
+  filtered and unfiltered requests.  Must never be rejected and never
+  be charged for anyone else's trouble.
+* **burst** — the over-budget tenant: a tight token-bucket quota
+  (``qps=2`` sustained, small burst) hammered every round.  Its
+  rejections must land on *its* account only — quota buckets are
+  independent, so starving acme/drifty through burst's excess is
+  structurally impossible (``quota_violations`` audits this).
+* **drifty** — queries the shared index like everyone else, but also
+  owns a :class:`~repro.stream.mutable.MutableQuIVerIndex` under
+  churn.  A green phase streams in-distribution vectors (no alarm);
+  the drift phase replaces the live set with sign-collapsed vectors,
+  collapsing the accumulator's bit-plane entropy across the calibrated
+  band thresholds — the armed :class:`~repro.obs.DriftMonitor` must
+  raise.
+
+A deadline-pressure segment forces the ef-degradation ladder so
+degrades/drops show up attributed per tenant, and a paired
+obs-vs-bare run on the identical workload measures the telemetry tax.
+
+Knobs (all env):
+
+* ``REPRO_MT_CLIENTS`` (8) — closed-loop concurrency;
+* ``REPRO_MT_ROUNDS`` (12) — rounds per phase;
+* ``REPRO_MT_ASSERT`` (0) — enable the CI smoke assertions (nonzero
+  QPS, metrics JSONL parseable, drift alarm in the drift phase only,
+  zero cross-tenant quota violations);
+* ``REPRO_MT_OVERHEAD_PCT`` (5.0) — telemetry overhead gate, checked
+  only under ``REPRO_MT_ASSERT``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_Q, dataset, index_for
+from repro.obs import JsonlSink, ObsHub, render_prometheus
+from repro.obs.metrics import get_default_registry
+from repro.serve.engine import QueryEngine
+from repro.stream.mutable import MutableQuIVerIndex
+
+CLIENTS = int(os.environ.get("REPRO_MT_CLIENTS", 8))
+ROUNDS = int(os.environ.get("REPRO_MT_ROUNDS", 12))
+ASSERT = os.environ.get("REPRO_MT_ASSERT", "0") == "1"
+OVERHEAD_PCT = float(os.environ.get("REPRO_MT_OVERHEAD_PCT", 5.0))
+
+DATASET = "minilm-surrogate"
+N_LABELS = 4
+FILTER_LABEL = 1
+EF = 64
+K = 10
+
+JSONL_PATH = (
+    pathlib.Path(__file__).resolve().parents[1]
+    / "experiments" / "obs" / "multitenant.jsonl"
+)
+
+# churn sizing: per-round insert batch for the drifty tenant's corpus
+CHURN = 48
+
+
+def _request_mix(queries, rng):
+    """One round of (tenant, queries, kwargs) triples: acme gets the
+    serve benchmark's mixed shape, drifty small batches, burst
+    singletons (the cheapest way to drain its bucket fast)."""
+    out = []
+    for c in range(CLIENTS):
+        if c % 4 < 2:
+            tenant, size = "acme", [2, 4][c % 2]
+        elif c % 4 == 2:
+            tenant, size = "drifty", 2
+        else:
+            # the over-budget tenant fires a salvo of singletons every
+            # round — far above its sustained qps, so its bucket drains
+            # no matter how slowly the rounds tick
+            for _ in range(4):
+                row = rng.integers(0, len(queries), 1)
+                out.append(("burst", queries[row], {"ef": EF, "k": K}))
+            continue
+        rows = rng.integers(0, len(queries), size)
+        kwargs = {"ef": EF, "k": K}
+        if tenant == "acme" and c % 2 == 0:
+            kwargs["filter"] = FILTER_LABEL
+        out.append((tenant, queries[rows], kwargs))
+    return out
+
+
+def _rounds(engine, n, queries, rng, deadline_ms=None):
+    """Closed-loop rounds; returns (queries_admitted, wall_seconds)."""
+    nq = 0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        tickets = []
+        for tenant, q, kw in _request_mix(queries, rng):
+            if deadline_ms is not None:
+                kw = dict(kw, deadline_ms=deadline_ms)
+            tickets.append(engine.submit(q, tenant=tenant, **kw))
+            nq += len(q)
+        engine.pump()
+        for t in tickets:
+            engine.result(t)
+    return nq, time.perf_counter() - t0
+
+
+def _warm(engine, queries):
+    engine.warmup(buckets=(8, 32), configs=({}, {"filter": FILTER_LABEL}))
+    _rounds(engine, 2, queries, np.random.default_rng(3))
+
+
+def run():
+    rng = np.random.default_rng(11)
+    base, queries = dataset(DATASET)
+    base = np.asarray(base, dtype=np.float32)
+    queries = np.asarray(queries, dtype=np.float32)[:BENCH_Q]
+    idx, _ = index_for(DATASET)
+    if idx.labels is None:
+        labels = np.random.default_rng(0).integers(0, N_LABELS, len(base))
+        idx.attach_labels(list(labels), n_labels=N_LABELS)
+        idx.build_label_entries(min_count=32)
+
+    JSONL_PATH.unlink(missing_ok=True)
+    hub = ObsHub(sinks=[JsonlSink(JSONL_PATH)])
+    engine = QueryEngine(idx, default_k=K, default_ef=EF, obs=hub)
+    engine.set_quota("acme", qps=1e6)
+    engine.set_quota("burst", qps=2.0, burst=6)
+    _warm(engine, queries)
+
+    # the drifty tenant's own streaming corpus, drift alarms armed
+    dim = base.shape[1]
+    churn_idx = MutableQuIVerIndex.empty(dim, capacity=4 * ROUNDS * CHURN)
+    monitor = churn_idx.attach_drift_monitor(tenant="drifty")
+
+    rows = []
+
+    # -- phase 1: green churn (in-distribution inserts, no alarm) ----------
+    green_ids = []
+    nq_g, wall_g = 0, 0.0
+    for r in range(ROUNDS):
+        lo = (r * CHURN) % max(len(base) - CHURN, 1)
+        green_ids.append(churn_idx.insert(base[lo:lo + CHURN]))
+        nq, w = _rounds(engine, 1, queries, rng)
+        nq_g, wall_g = nq_g + nq, wall_g + w
+    alarms_green = len(monitor.events)
+    engine.emit_report()
+    rows.append({
+        "name": "mt_green_phase",
+        "us_per_call": wall_g / nq_g * 1e6,
+        "queries": nq_g, "churn_inserts": ROUNDS * CHURN,
+        "drift_band": monitor.band, "alarms": alarms_green,
+    })
+
+    # -- phase 2: drift (sign-collapsed inserts + churn out the green
+    # live set, collapsing bit-plane entropy across the red band) ----------
+    drift_rng = np.random.default_rng(13)
+    nq_d, wall_d = 0, 0.0
+    for r in range(ROUNDS):
+        bad = np.abs(
+            drift_rng.normal(size=(CHURN, dim))
+        ).astype(np.float32) + 3.0
+        churn_idx.insert(bad)
+        if r < len(green_ids):
+            churn_idx.delete(green_ids[r])
+        nq, w = _rounds(engine, 1, queries, rng)
+        nq_d, wall_d = nq_d + nq, wall_d + w
+    alarms_drift = len(monitor.events) - alarms_green
+    engine.emit_report()
+    rows.append({
+        "name": "mt_drift_phase",
+        "us_per_call": wall_d / nq_d * 1e6,
+        "queries": nq_d, "churn_inserts": ROUNDS * CHURN,
+        "drift_band": monitor.band, "alarms": alarms_drift,
+    })
+
+    # -- phase 3: deadline pressure (degrades/drops, attributed) -----------
+    rep = engine.stats_report()
+    p50 = rep["p50_ms"] or 1.0
+    nq_p, wall_p = _rounds(engine, ROUNDS, queries, rng,
+                           deadline_ms=max(0.5 * p50, 0.2))
+    engine.emit_report()
+    rows.append({
+        "name": "mt_deadline_phase",
+        "us_per_call": wall_p / nq_p * 1e6,
+        "queries": nq_p,
+        "degraded": engine.stats.degraded,
+        "dropped": engine.stats.dropped,
+    })
+
+    # -- per-tenant SLO accounts -------------------------------------------
+    tenant_report = engine.tenants.report()
+    for name, t in tenant_report["tenants"].items():
+        rows.append({"name": f"mt_tenant_{name}", **t})
+
+    # -- telemetry overhead: identical workload, obs vs bare engine --------
+    obs_engine = QueryEngine(idx, default_k=K, default_ef=EF)
+    bare_engine = QueryEngine(idx, default_k=K, default_ef=EF, obs=False)
+    _warm(obs_engine, queries)
+    _warm(bare_engine, queries)
+    nq_o, wall_o = _rounds(obs_engine, ROUNDS,
+                           queries, np.random.default_rng(5))
+    nq_b, wall_b = _rounds(bare_engine, ROUNDS,
+                           queries, np.random.default_rng(5))
+    qps_obs, qps_bare = nq_o / wall_o, nq_b / wall_b
+    overhead_pct = (qps_bare - qps_obs) / qps_bare * 100.0
+    rows.append({
+        "name": "mt_overhead",
+        "qps_obs": round(qps_obs, 1),
+        "qps_bare": round(qps_bare, 1),
+        "overhead_pct": round(overhead_pct, 2),
+    })
+
+    # -- sink + scrape sanity ----------------------------------------------
+    records = [
+        json.loads(line)
+        for line in JSONL_PATH.read_text().splitlines() if line
+    ]
+    prom_text = render_prometheus(get_default_registry())
+    quota_violations = tenant_report["quota_violations"]
+    qps_total = (nq_g + nq_d) / (wall_g + wall_d)
+    rows.append({
+        "name": "mt_summary",
+        "qps": round(qps_total, 1),
+        "quota_violations": quota_violations,
+        "alarms_green": alarms_green,
+        "alarms_drift": alarms_drift,
+        "drift_band_final": monitor.band,
+        "jsonl_records": len(records),
+        "prometheus_lines": len(prom_text.splitlines()),
+    })
+
+    hub.close()
+
+    if ASSERT:
+        assert qps_total > 0, "multitenant QPS must be nonzero"
+        assert len(records) >= 3 and all(
+            "metrics" in r for r in records
+        ), "metrics JSONL missing or unparseable"
+        assert alarms_green == 0, (
+            f"{alarms_green} drift alarms during in-distribution churn"
+        )
+        assert alarms_drift >= 1, "no drift alarm in the drift phase"
+        assert quota_violations == 0, (
+            f"{quota_violations} cross-tenant quota violations"
+        )
+        t = tenant_report["tenants"]
+        assert t["burst"]["rejected"] > 0, (
+            "over-budget tenant was never rejected"
+        )
+        assert t["acme"]["rejected"] == 0 and t["drifty"]["rejected"] == 0, (
+            "quota rejections leaked onto in-budget tenants"
+        )
+        assert overhead_pct <= OVERHEAD_PCT, (
+            f"telemetry overhead {overhead_pct:.1f}% > {OVERHEAD_PCT}%"
+        )
+
+    extra = {
+        "tenant_report": tenant_report,
+        "drift": monitor.report(),
+    }
+    return rows, extra

@@ -21,6 +21,7 @@ from benchmarks import (
     construction,
     filtered,
     kernel_bench,
+    multitenant,
     serve,
     streaming,
     table2_memory,
@@ -43,6 +44,7 @@ TABLES = {
     "streaming": streaming.run,
     "filtered": filtered.run,
     "serve": serve.run,
+    "multitenant": multitenant.run,
 }
 
 
@@ -52,8 +54,13 @@ def main() -> None:
     for name in names:
         t0 = time.perf_counter()
         rows = TABLES[name]()
+        # a suite may return (rows, extra) to stamp suite-level fields
+        # (e.g. the multitenant tenant/drift reports) into its artifact
+        extra = None
+        if isinstance(rows, tuple):
+            rows, extra = rows
         emit(rows, name)
-        path = write_bench_json(rows, name)
+        path = write_bench_json(rows, name, extra)
         print(f"# {name} done in {time.perf_counter()-t0:.0f}s "
               f"-> {path}", file=sys.stderr)
 

@@ -26,6 +26,7 @@ import time
 import numpy as np
 
 from benchmarks.common import BENCH_Q, dataset, index_for
+from repro.obs import ObsHub, autostart
 from repro.plan import trace
 from repro.serve.engine import QueryEngine
 
@@ -134,7 +135,13 @@ def run() -> list[dict]:
         idx.attach_labels(list(labels), n_labels=N_LABELS)
         idx.build_label_entries(min_count=32)
 
-    engine = QueryEngine(idx, default_k=K, default_ef=EF)
+    # telemetry (DESIGN.md §12): hub over the env-staged sinks
+    # (launch/serve.py sets REPRO_OBS_JSONL/REPRO_OBS_INTERVAL_S), with
+    # the periodic reporter pushing live stats_report snapshots and an
+    # optional Prometheus endpoint on REPRO_METRICS_PORT
+    engine = QueryEngine(idx, default_k=K, default_ef=EF,
+                         obs=ObsHub.from_env())
+    reporter, server = autostart(engine.obs, extra_fn=engine.stats_report)
     # warm the closed plan set: unfiltered + filtered, singleton bucket
     # through the coalesced-round bucket
     buckets = (8, 32)
@@ -218,6 +225,12 @@ def run() -> list[dict]:
         "retraces_steady": retraces,
         "plans_compiled": rep["plan_plans_compiled"],
     })
+
+    if reporter is not None:
+        reporter.stop()
+    if server is not None:
+        server.close()
+    engine.obs.close()
 
     if ASSERT:
         assert engine_qps > 0, "engine QPS must be nonzero"

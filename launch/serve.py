@@ -71,11 +71,21 @@ def tuned_env() -> dict:
     env.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
     env.setdefault("JAX_ENABLE_X64", "0")
 
+    # observability defaults (DESIGN.md §12): the serve/multitenant
+    # benchmarks build an ObsHub from these — periodic reports land as
+    # JSONL under experiments/obs/, and REPRO_METRICS_PORT (opt-in, no
+    # default: it opens a listening socket) serves the same registry as
+    # a Prometheus text endpoint at /metrics.
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    env.setdefault(
+        "REPRO_OBS_JSONL", str(repo / "experiments" / "obs" / "serve.jsonl")
+    )
+    env.setdefault("REPRO_OBS_INTERVAL_S", "5")
+
     xla_flags = env.get("XLA_FLAGS", "")
     if "--xla_force_host_platform_device_count" not in xla_flags:
         env["XLA_FLAGS"] = f"{xla_flags} {PIN_FLAG}".strip()
 
-    repo = pathlib.Path(__file__).resolve().parents[1]
     src = str(repo / "src")
     pypath = env.get("PYTHONPATH", "")
     if src not in pypath.split(os.pathsep):

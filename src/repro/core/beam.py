@@ -120,8 +120,25 @@ def escalated_search(run, reprs, queries, ef: int, *,
     """
     all_ids, all_scores, margins = run(reprs, queries, ef, adaptive)
     if adaptive and margins is not None:
+        # margin telemetry (DESIGN.md §12): the per-query margin
+        # distribution is the live recall-health signal, and the
+        # escalated fraction is the cost it buys.  Lazy import — obs is
+        # a leaf module, but core must stay importable without it warm.
+        from repro.obs.metrics import get_default_registry
+        reg = get_default_registry()
+        reg.histogram(
+            "quiver_beam_margin",
+            "per-query normalized k-th-neighbor score margin",
+            buckets=(-1.0, 0.0, 0.05, 0.1, 0.15, 0.2, 0.3, 0.5, 1.0),
+            window=0,
+        ).observe_many(np.asarray(margins, dtype=np.float64))
         esc = np.nonzero(margins < margin_thr)[0]
         if esc.size:
+            reg.counter(
+                "quiver_escalated_queries_total",
+                "tight-margin queries re-run at the escalated stage",
+                labels=("plan",),
+            ).inc(int(esc.size), plan=f"legacy-ef{ef}x{mult}")
             take = jnp.asarray(esc.astype(np.int32))
             esc_ids, esc_scores, _ = run(
                 reprs[take], queries[take], ef * mult, False

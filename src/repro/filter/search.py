@@ -104,6 +104,13 @@ def brute_force_topk(
     ``repro.core.index.topk_by_dist``.
     """
     nq = int(queries.shape[0])
+    # route telemetry: brute-side query volume, next to the graph side's
+    # plan counters (lazy leaf import, same pattern as note_trace)
+    from repro.obs.metrics import get_default_registry
+    get_default_registry().counter(
+        "quiver_brute_queries_total",
+        "queries served by the exact brute-force route",
+    ).inc(nq)
     if len(match_ids) == 0:
         return (np.full((nq, k), -1, np.int32),
                 np.full((nq, k), -np.inf, np.float32))

@@ -1,0 +1,76 @@
+"""Fleet telemetry: metrics, tracing, tenant SLOs, drift alarms
+(DESIGN.md §12).
+
+The observability substrate of the serving stack:
+
+* :mod:`repro.obs.metrics` — labelled counters/gauges/fixed-bucket
+  histograms in a :class:`MetricsRegistry`; :class:`Ring` bounded
+  windows for SLO percentiles;
+* :mod:`repro.obs.tracing` — span-based query-lifecycle tracing
+  (admission → coalesce → launch → finalize → escalate/degrade);
+* :mod:`repro.obs.sinks` — JSONL / stdout push sinks, Prometheus text
+  exposition and the ``/metrics`` snapshot endpoint;
+* :mod:`repro.obs.tenant` — token-bucket admission quotas and
+  per-tenant SLO accounting (:class:`TenantLedger`);
+* :mod:`repro.obs.drift` — probe-drift alarms: the paper's
+  green/amber/red boundary re-scored live under streaming churn;
+* :mod:`repro.obs.hub` — :class:`ObsHub` bundling the above,
+  :class:`PeriodicReporter` push loop, env-driven ``autostart``.
+"""
+
+from repro.obs.drift import BANDS, DriftAlarm, DriftMonitor
+from repro.obs.hub import ObsHub, PeriodicReporter, autostart
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Ring,
+    get_default_registry,
+    reset_default_registry,
+)
+from repro.obs.sinks import (
+    JsonlSink,
+    PrometheusServer,
+    Sink,
+    StdoutSink,
+    render_prometheus,
+    sinks_from_env,
+)
+from repro.obs.tenant import (
+    DEFAULT_TENANT,
+    TenantLedger,
+    TenantQuota,
+    TokenBucket,
+)
+from repro.obs.tracing import Span, Tracer
+
+__all__ = [
+    "BANDS",
+    "Counter",
+    "DEFAULT_BUCKETS",
+    "DEFAULT_TENANT",
+    "DriftAlarm",
+    "DriftMonitor",
+    "Gauge",
+    "Histogram",
+    "JsonlSink",
+    "MetricsRegistry",
+    "ObsHub",
+    "PeriodicReporter",
+    "PrometheusServer",
+    "Ring",
+    "Sink",
+    "Span",
+    "StdoutSink",
+    "TenantLedger",
+    "TenantQuota",
+    "TokenBucket",
+    "Tracer",
+    "autostart",
+    "get_default_registry",
+    "render_prometheus",
+    "reset_default_registry",
+    "sinks_from_env",
+]

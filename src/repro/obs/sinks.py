@@ -1,0 +1,195 @@
+"""Pluggable emission sinks + Prometheus text exposition.
+
+``stats_report``/``trace_report`` used to be pull-only dicts nothing
+consumed in production; a :class:`Sink` is the push side.  Each
+``emit(record)`` receives one JSON-serializable snapshot (metrics +
+spans + whatever the caller attaches) and ships it somewhere:
+
+* :class:`JsonlSink` — append one JSON line per snapshot to a file (the
+  fleet-telemetry flight recorder; trivially greppable/parseable);
+* :class:`StdoutSink` — terse human-readable summary to stderr (the
+  operator's tail -f);
+* :func:`render_prometheus` / :class:`PrometheusServer` — Prometheus
+  text-exposition snapshot of a registry, optionally served on an HTTP
+  endpoint (``GET /metrics``) for a scraper.  Stdlib ``http.server``
+  in a daemon thread: no new dependencies.
+
+``sinks_from_env`` builds the sink list the launcher stages
+(``launch/serve.py``): ``REPRO_OBS_JSONL=<path>``,
+``REPRO_OBS_STDOUT=1``.
+"""
+
+from __future__ import annotations
+
+import http.server
+import json
+import os
+import pathlib
+import sys
+import threading
+
+from repro.obs.metrics import MetricsRegistry
+
+
+class Sink:
+    """One destination for telemetry snapshots."""
+
+    def emit(self, record: dict) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink(Sink):
+    """Append-one-JSON-line-per-snapshot file sink."""
+
+    def __init__(self, path):
+        self.path = pathlib.Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._fh = self.path.open("a")
+        self._lock = threading.Lock()
+
+    def emit(self, record: dict) -> None:
+        line = json.dumps(record, default=_json_default)
+        with self._lock:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            self._fh.close()
+
+
+class StdoutSink(Sink):
+    """Terse one-line-per-snapshot pretty printer (stderr by default:
+    benchmark CSV owns stdout)."""
+
+    def __init__(self, stream=None, prefix: str = "[obs]"):
+        self.stream = stream if stream is not None else sys.stderr
+        self.prefix = prefix
+
+    def emit(self, record: dict) -> None:
+        bits = []
+        for key in ("unix_ts", "requests", "done", "dropped", "rejected"):
+            if key in record:
+                bits.append(f"{key}={record[key]}")
+        metrics = record.get("metrics", {})
+        for name in sorted(metrics):
+            series = metrics[name]
+            if isinstance(series, dict) and len(series) <= 4:
+                for lbl, v in series.items():
+                    tag = f"{name}{{{lbl}}}" if lbl else name
+                    if isinstance(v, dict):      # histogram summary
+                        bits.append(f"{tag}.count={v.get('count')}")
+                    else:
+                        bits.append(f"{tag}={v:g}")
+        print(f"{self.prefix} " + " ".join(bits), file=self.stream)
+
+
+def _json_default(o):
+    try:
+        return float(o)
+    except (TypeError, ValueError):
+        return str(o)
+
+
+# -- Prometheus text exposition -------------------------------------------
+
+
+def _escape(v) -> str:
+    return str(v).replace("\\", "\\\\").replace('"', '\\"')
+
+
+def _fmt_labels(names, values, extra=()) -> str:
+    pairs = [
+        f'{n}="{_escape(v)}"' for n, v in (*zip(names, values), *extra)
+    ]
+    return "{" + ",".join(pairs) + "}" if pairs else ""
+
+
+def render_prometheus(registry: MetricsRegistry) -> str:
+    """Text-exposition-format snapshot of every series in ``registry``
+    (counters/gauges verbatim; histograms as cumulative ``_bucket``
+    series plus ``_sum``/``_count``, the standard shape)."""
+    lines = []
+    for m in registry.metrics():
+        lines.append(f"# HELP {m.name} {m.help or m.name}")
+        lines.append(f"# TYPE {m.name} {m.kind}")
+        for key, s in sorted(m.series().items()):
+            if m.kind == "histogram":
+                cum = 0
+                for bound, c in zip(m.buckets, s.counts):
+                    cum += int(c)
+                    lbl = _fmt_labels(m.label_names, key,
+                                      extra=(("le", f"{bound:g}"),))
+                    lines.append(f"{m.name}_bucket{lbl} {cum}")
+                cum += int(s.counts[-1])
+                lbl = _fmt_labels(m.label_names, key,
+                                  extra=(("le", "+Inf"),))
+                lines.append(f"{m.name}_bucket{lbl} {cum}")
+                base = _fmt_labels(m.label_names, key)
+                lines.append(f"{m.name}_sum{base} {s.sum:g}")
+                lines.append(f"{m.name}_count{base} {s.count}")
+            else:
+                lbl = _fmt_labels(m.label_names, key)
+                lines.append(f"{m.name}{lbl} {s[0]:g}")
+    return "\n".join(lines) + "\n"
+
+
+class PrometheusServer:
+    """``GET /metrics`` snapshot endpoint over a registry.
+
+    Stdlib ``ThreadingHTTPServer`` on a daemon thread — a scrape reads
+    whatever the registry holds at that instant; nothing blocks the
+    serving loop.  ``port=0`` binds an ephemeral port (tests).
+    """
+
+    def __init__(self, registry: MetricsRegistry, port: int = 0,
+                 host: str = "127.0.0.1"):
+        self.registry = registry
+        outer = self
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):
+                if self.path.rstrip("/") not in ("", "/metrics"):
+                    self.send_error(404)
+                    return
+                body = render_prometheus(outer.registry).encode()
+                self.send_response(200)
+                self.send_header(
+                    "Content-Type", "text/plain; version=0.0.4"
+                )
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):        # keep scrapes silent
+                pass
+
+        self._httpd = http.server.ThreadingHTTPServer(
+            (host, port), Handler
+        )
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, daemon=True,
+            name=f"prometheus:{self.port}",
+        )
+        self._thread.start()
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+
+
+def sinks_from_env(env=None) -> list[Sink]:
+    """Build the sink list from the env the launcher staged:
+    ``REPRO_OBS_JSONL`` (file path), ``REPRO_OBS_STDOUT`` (=1)."""
+    env = os.environ if env is None else env
+    sinks: list[Sink] = []
+    path = env.get("REPRO_OBS_JSONL")
+    if path:
+        sinks.append(JsonlSink(path))
+    if env.get("REPRO_OBS_STDOUT", "0") == "1":
+        sinks.append(StdoutSink())
+    return sinks

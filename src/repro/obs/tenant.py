@@ -1,0 +1,225 @@
+"""Per-tenant SLO accounting and token-bucket admission quotas.
+
+Multi-tenant serving needs two things the engine could not answer
+before: *enforcement* (a tenant may not buy more than its share of the
+fleet) and *attribution* (whose requests degraded, whose dropped, whose
+p99 blew the SLO).  A :class:`TenantLedger` owns both:
+
+* **quota** — one :class:`TokenBucket` per tenant (``qps`` refill rate,
+  ``burst`` capacity, cost = queries in the request).  Buckets are
+  independent, so an over-budget tenant exhausts only its own tokens:
+  rejecting it cannot starve anyone else — isolation is structural, not
+  scheduled.  Tenants without a quota are never rejected.
+* **accounting** — per-tenant counters (submitted/admitted/rejected/
+  done/dropped/degraded, queries), a latency :class:`Ring` for window
+  p50/p99, and the audit trail the multitenant benchmark checks:
+  ``quota_violations`` counts admissions that went through on an empty
+  bucket, which the ledger's own ``admit`` makes impossible — a nonzero
+  value means some path bypassed admission.
+
+The ledger is clock-injected (same convention as ``QueryEngine``) so
+quota refill is testable without sleeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.obs.metrics import MetricsRegistry, Ring
+
+DEFAULT_TENANT = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Admission budget: sustained ``qps`` with ``burst`` headroom."""
+
+    qps: float
+    burst: float | None = None       # default: 2 * qps (min 1)
+
+    def capacity(self) -> float:
+        if self.burst is not None:
+            return float(self.burst)
+        return max(2.0 * self.qps, 1.0)
+
+
+class TokenBucket:
+    """Classic token bucket: refills at ``qps``, caps at ``capacity``."""
+
+    __slots__ = ("rate", "capacity", "tokens", "stamp")
+
+    def __init__(self, quota: TenantQuota, now: float):
+        self.rate = float(quota.qps)
+        self.capacity = quota.capacity()
+        self.tokens = self.capacity      # full burst on arrival
+        self.stamp = now
+
+    def refill(self, now: float) -> None:
+        dt = max(now - self.stamp, 0.0)
+        self.tokens = min(self.capacity, self.tokens + dt * self.rate)
+        self.stamp = now
+
+    def take(self, cost: float, now: float) -> bool:
+        self.refill(now)
+        if self.tokens >= cost:
+            self.tokens -= cost
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class TenantStats:
+    submitted: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    done: int = 0
+    dropped: int = 0
+    degraded: int = 0
+    queries: int = 0                 # admitted queries
+    rejected_queries: int = 0
+    latencies: Ring = None           # set by the ledger (window-sized)
+
+
+class TenantLedger:
+    """Quota enforcement + per-tenant serving accounts (see module
+    docstring).  One per :class:`~repro.serve.engine.QueryEngine`."""
+
+    def __init__(
+        self,
+        *,
+        registry: MetricsRegistry | None = None,
+        latency_window: int = 1024,
+        clock=time.monotonic,
+    ):
+        self.clock = clock
+        self.latency_window = int(latency_window)
+        self._quotas: dict[str, TenantQuota] = {}
+        self._buckets: dict[str, TokenBucket] = {}
+        self._stats: dict[str, TenantStats] = {}
+        self.quota_violations = 0
+        self._reg = registry
+        if registry is not None:
+            self._c_requests = registry.counter(
+                "quiver_tenant_requests_total",
+                "requests submitted per tenant and admission outcome",
+                labels=("tenant", "outcome"),
+            )
+            self._c_queries = registry.counter(
+                "quiver_tenant_queries_total",
+                "admitted queries per tenant", labels=("tenant",),
+            )
+            self._h_latency = registry.histogram(
+                "quiver_tenant_latency_seconds",
+                "request latency per tenant", labels=("tenant",),
+                window=latency_window,
+            )
+            self._g_tokens = registry.gauge(
+                "quiver_tenant_quota_tokens",
+                "remaining admission tokens", labels=("tenant",),
+            )
+
+    # -- quota -------------------------------------------------------------
+
+    def set_quota(self, tenant: str, qps: float,
+                  burst: float | None = None) -> TenantQuota:
+        q = TenantQuota(qps=qps, burst=burst)
+        self._quotas[tenant] = q
+        self._buckets[tenant] = TokenBucket(q, self.clock())
+        return q
+
+    def quota(self, tenant: str) -> TenantQuota | None:
+        return self._quotas.get(tenant)
+
+    def stats(self, tenant: str) -> TenantStats:
+        s = self._stats.get(tenant)
+        if s is None:
+            s = self._stats[tenant] = TenantStats(
+                latencies=Ring(self.latency_window)
+            )
+        return s
+
+    def admit(self, tenant: str, n_queries: int,
+              now: float | None = None) -> bool:
+        """Charge ``n_queries`` against the tenant's bucket; False means
+        the request must be rejected (quota exhausted).  Tenants with no
+        quota are always admitted."""
+        now = self.clock() if now is None else now
+        s = self.stats(tenant)
+        s.submitted += 1
+        bucket = self._buckets.get(tenant)
+        ok = True if bucket is None else bucket.take(n_queries, now)
+        if ok:
+            s.admitted += 1
+            s.queries += n_queries
+            if bucket is not None and bucket.tokens < 0:
+                # structurally unreachable through take(); a nonzero
+                # count means an admission path bypassed the bucket
+                self.quota_violations += 1
+        else:
+            s.rejected += 1
+            s.rejected_queries += n_queries
+        if self._reg is not None:
+            self._c_requests.inc(
+                tenant=tenant, outcome="admitted" if ok else "rejected"
+            )
+            if ok:
+                self._c_queries.inc(n_queries, tenant=tenant)
+            if bucket is not None:
+                self._g_tokens.set(bucket.tokens, tenant=tenant)
+        return ok
+
+    # -- attribution -------------------------------------------------------
+
+    def observe(self, tenant: str, *, status: str,
+                latency: float | None = None,
+                degraded: bool = False) -> None:
+        """Account one finished request (``done`` | ``dropped``)."""
+        s = self.stats(tenant)
+        if status == "done":
+            s.done += 1
+        elif status == "dropped":
+            s.dropped += 1
+        else:
+            raise ValueError(f"unknown terminal status {status!r}")
+        if degraded:
+            s.degraded += 1
+        if latency is not None:
+            s.latencies.append(latency)
+            if self._reg is not None:
+                self._h_latency.observe(latency, tenant=tenant)
+
+    # -- reporting ---------------------------------------------------------
+
+    def tenants(self) -> list[str]:
+        return sorted(set(self._stats) | set(self._quotas))
+
+    def report(self) -> dict:
+        """Per-tenant SLO account: counters, window percentiles, quota
+        state, plus the fleet-wide ``quota_violations`` audit."""
+        out = {"quota_violations": self.quota_violations, "tenants": {}}
+        for t in self.tenants():
+            s = self.stats(t)
+            q = self._quotas.get(t)
+            lat = s.latencies
+            out["tenants"][t] = {
+                "submitted": s.submitted,
+                "admitted": s.admitted,
+                "rejected": s.rejected,
+                "done": s.done,
+                "dropped": s.dropped,
+                "degraded": s.degraded,
+                "queries": s.queries,
+                "rejected_queries": s.rejected_queries,
+                "p50_ms": (
+                    round(lat.percentile(50) * 1e3, 3)
+                    if len(lat) else None
+                ),
+                "p99_ms": (
+                    round(lat.percentile(99) * 1e3, 3)
+                    if len(lat) else None
+                ),
+                "quota_qps": q.qps if q else None,
+                "quota_burst": q.capacity() if q else None,
+            }
+        return out

@@ -71,6 +71,11 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.executions = 0
+        # telemetry hub (repro.obs.ObsHub, DESIGN.md §12): set by the
+        # serve engine (or any owner) to land per-plan stage timings in
+        # ``quiver_plan_seconds{stage,plan}`` and escalation counts in
+        # ``quiver_escalated_queries_total{plan}``.  None: zero overhead.
+        self.obs = None
 
     # -- program construction ---------------------------------------------
 
@@ -148,6 +153,8 @@ class PlanCache:
         (jax async dispatch: compute proceeds while the host goes on to
         stage the next batch).
         """
+        obs = self.obs
+        t0 = obs.tracer.clock() if obs is not None else 0.0
         queries = _normalize(jnp.asarray(queries, dtype=jnp.float32))
         if queries.ndim == 1:
             queries = queries[None]
@@ -177,7 +184,19 @@ class PlanCache:
                 args += (ctx.result_valid,)
             ids, scores, margins = prog(*args)
             chunks.append((ids, scores, margins, real))
+        if obs is not None:
+            self._stage_hist(obs).observe(
+                obs.tracer.clock() - t0,
+                stage="launch", plan=plan.signature(),
+            )
         return PendingResult(plan, ctx, queries, reprs, chunks)
+
+    def _stage_hist(self, obs):
+        return obs.registry.histogram(
+            "quiver_plan_seconds",
+            "per-plan stage wall time (launch dispatch / finalize sync)",
+            labels=("stage", "plan"),
+        )
 
     def finalize(
         self, pending: PendingResult
@@ -185,6 +204,8 @@ class PlanCache:
         """Sync a launched plan to host and run its second (escalation)
         stage where margins demand one."""
         plan, ctx = pending.plan, pending.ctx
+        obs = self.obs
+        t0 = obs.tracer.clock() if obs is not None else 0.0
         if plan.route == "brute":
             return self._run_brute(plan, ctx, pending.queries)
         out_ids, out_scores, out_margin = [], [], []
@@ -194,14 +215,32 @@ class PlanCache:
             out_margin.append(np.asarray(margins[:real]))
         all_ids = np.concatenate(out_ids)
         all_scores = np.concatenate(out_scores)
+        if obs is not None:
+            self._stage_hist(obs).observe(
+                obs.tracer.clock() - t0,
+                stage="finalize", plan=plan.signature(),
+            )
         if plan.adaptive:
             margins = np.concatenate(out_margin)
             esc = np.nonzero(margins < plan.escalate_margin)[0]
             if esc.size:
                 take = jnp.asarray(esc.astype(np.int32))
-                esc_ids, esc_scores = self.finalize(self.launch(
-                    plan.escalated(), ctx, pending.queries[take]
-                ))
+                if obs is not None:
+                    obs.registry.counter(
+                        "quiver_escalated_queries_total",
+                        "tight-margin queries re-run at the escalated "
+                        "stage", labels=("plan",),
+                    ).inc(int(esc.size), plan=plan.signature())
+                    with obs.tracer.span("escalate",
+                                         plan=plan.signature(),
+                                         queries=int(esc.size)):
+                        esc_ids, esc_scores = self.finalize(self.launch(
+                            plan.escalated(), ctx, pending.queries[take]
+                        ))
+                else:
+                    esc_ids, esc_scores = self.finalize(self.launch(
+                        plan.escalated(), ctx, pending.queries[take]
+                    ))
                 all_ids[esc] = esc_ids
                 all_scores[esc] = esc_scores
         return all_ids, all_scores

@@ -37,8 +37,29 @@ from repro.filter import (
     validate,
     widened_ef,
 )
+from repro.obs.metrics import get_default_registry
 from repro.plan.plan import PlanContext, QueryPlan
 from repro.probe import resolve_schedule
+
+
+def _note_resolution(plan: QueryPlan, selectivity: float | None) -> None:
+    """Route-decision telemetry (DESIGN.md §12): every resolution lands
+    in the process registry so fleet dashboards see the filter-route
+    mix and the selectivity distribution driving it."""
+    reg = get_default_registry()
+    reg.counter(
+        "quiver_plan_resolutions_total",
+        "resolve_plan outcomes by route",
+        labels=("route", "filtered", "nav"),
+    ).inc(route=plan.route, filtered=str(plan.filtered).lower(),
+          nav=plan.nav)
+    if selectivity is not None:
+        reg.histogram(
+            "quiver_filter_selectivity",
+            "match fraction of filtered requests",
+            buckets=(0.001, 0.005, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0),
+            window=0,
+        ).observe(selectivity)
 
 
 def resolve_plan(
@@ -88,14 +109,13 @@ def resolve_plan(
             if route(sel, selectivity_floor) == "brute":
                 ctx.match_ids = match.astype(np.int32)
                 ctx.selectivity = sel
-                return (
-                    QueryPlan(
-                        nav=kind, k=k, ef=max(ef, k), expand=expand,
-                        rerank=do_rerank, route="brute",
-                        query_batch=query_batch,
-                    ),
-                    ctx,
+                plan = QueryPlan(
+                    nav=kind, k=k, ef=max(ef, k), expand=expand,
+                    rerank=do_rerank, route="brute",
+                    query_batch=query_batch,
                 )
+                _note_resolution(plan, sel)
+                return plan, ctx
         filtered = True
         ctx.result_valid = mask
         ctx.selectivity = sel
@@ -110,4 +130,5 @@ def resolve_plan(
         escalate_margin=sched.escalate_margin,
         escalate_mult=sched.escalate_mult, query_batch=query_batch,
     )
+    _note_resolution(plan, ctx.selectivity)
     return plan, ctx

@@ -14,8 +14,12 @@ the serve benchmark and tier-1 tests pin that down with
 :func:`assert_no_retrace` / :func:`snapshot` deltas, and
 :func:`trace_report` exposes the counters ``memory_breakdown``-style.
 
-This module is import-cycle-free on purpose (no ``repro.*`` imports):
-anything — core, filter, serve — may note traces into it.
+This module is import-cycle-free on purpose (its only ``repro.*``
+import is the leaf ``repro.obs.metrics``, itself stdlib+numpy-only):
+anything — core, filter, serve — may note traces into it.  Each trace
+event is mirrored into the process metrics registry
+(``quiver_jit_traces_total{program=...}``) so compilation storms are
+visible on the same scrape as everything else.
 """
 
 from __future__ import annotations
@@ -35,6 +39,14 @@ def note_trace(name: str) -> None:
     *inside* a jitted function's Python body)."""
     with _LOCK:
         _COUNTS[name] = _COUNTS.get(name, 0) + 1
+    # mirror into the metrics layer (trace events are rare — only at
+    # compile time — so the extra counter bump costs nothing steady-state)
+    from repro.obs.metrics import get_default_registry
+    get_default_registry().counter(
+        "quiver_jit_traces_total",
+        "jit trace (compilation) events per program",
+        labels=("program",),
+    ).inc(program=name)
 
 
 def counting_jit(fun, *, name: str | None = None, **jit_kwargs):

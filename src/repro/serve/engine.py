@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import DEFAULT_TENANT, ObsHub, Ring, Span, TenantLedger
 from repro.plan import resolve_plan, trace
 from repro.plan.plan import PlanContext, QueryPlan
 
@@ -56,10 +57,18 @@ class QueryTicket:
     filter_key: Any                    # hashable grouping key for filter
     submitted: float                   # clock() at submit
     deadline: float | None             # absolute clock() budget, or None
-    status: str = "pending"            # pending | done | dropped
+    tenant: str = DEFAULT_TENANT       # SLO accounting bucket
+    trace_id: int = 0                  # span context carried end to end
+    status: str = "pending"            # pending | done | dropped | rejected
     degraded: int = 0                  # deadline rungs walked down
     plan: QueryPlan | None = None      # the plan that actually served it
     latency: float | None = None       # seconds, admission -> completion
+
+
+# window for the engine-wide latency ring: long-running engines keep
+# the last this-many request latencies (per-tenant windows live in the
+# TenantLedger); percentiles are over the window, memory is O(window)
+DEFAULT_LATENCY_WINDOW = 4096
 
 
 @dataclasses.dataclass
@@ -71,7 +80,10 @@ class EngineStats:
     done: int = 0
     dropped: int = 0
     degraded: int = 0                  # requests served below asked ef
-    latencies: list = dataclasses.field(default_factory=list)
+    rejected: int = 0                  # quota-refused at admission
+    latencies: Ring = dataclasses.field(
+        default_factory=lambda: Ring(DEFAULT_LATENCY_WINDOW)
+    )
 
 
 class QueryEngine:
@@ -97,6 +109,21 @@ class QueryEngine:
 
     ``latency_slack``: a request is degraded when its remaining budget
     is under ``latency_slack`` × the EWMA batch latency of its plan.
+
+    Telemetry (DESIGN.md §12): ``obs`` is the engine's
+    :class:`~repro.obs.ObsHub` — per-tenant counters and latency
+    histograms land in ``obs.registry``, lifecycle spans (admission →
+    coalesce → launch → finalize) in ``obs.tracer``, and the same hub
+    is handed to the index's :class:`~repro.plan.cache.PlanCache` so
+    per-plan stage timings and escalations are attributed too.  Pass
+    ``obs=False`` to serve bare (the telemetry-overhead baseline).
+
+    Multi-tenancy: ``submit(tenant=...)`` threads a tenant id through
+    the ticket; :meth:`set_quota` arms a token-bucket admission cap
+    (queries/s) for that tenant — over-budget requests are *rejected*
+    at submit (status ``"rejected"``, -1/-inf results, accounted to the
+    tenant) and never reach the batch queue, so one tenant's overload
+    cannot starve another's window.
     """
 
     def __init__(
@@ -108,6 +135,8 @@ class QueryEngine:
         default_ef: int = 64,
         latency_slack: float = 1.0,
         ewma_alpha: float = 0.3,
+        latency_window: int = DEFAULT_LATENCY_WINDOW,
+        obs: ObsHub | bool | None = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         self.index = index
@@ -117,14 +146,59 @@ class QueryEngine:
         self.latency_slack = latency_slack
         self.ewma_alpha = ewma_alpha
         self.clock = clock
-        self.stats = EngineStats()
+        self.stats = EngineStats(latencies=Ring(latency_window))
         self._pending: list[QueryTicket] = []
         self._tickets: dict[int, QueryTicket] = {}
         self._results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._next_id = 0
         self._lat_ewma: dict[QueryPlan, float] = {}
+        if obs is False:
+            self.obs = None
+        elif obs is None or obs is True:
+            self.obs = ObsHub()
+        else:
+            self.obs = obs
+        self.tenants = TenantLedger(
+            registry=self.obs.registry if self.obs else None,
+            latency_window=latency_window,
+            clock=clock,
+        )
+        if self.obs is not None:
+            reg = self.obs.registry
+            self._m_requests = reg.counter(
+                "quiver_engine_requests_total",
+                "terminal request outcomes",
+                labels=("tenant", "status"),
+            )
+            self._m_degraded = reg.counter(
+                "quiver_engine_degraded_total",
+                "requests served below the asked ef", labels=("tenant",),
+            )
+            self._m_windows = reg.counter(
+                "quiver_engine_windows_total", "admission windows pumped"
+            )
+            self._m_batches = reg.counter(
+                "quiver_engine_batches_total",
+                "coalesced plan-group launches",
+            )
+            self._m_queue = reg.gauge(
+                "quiver_engine_pending_requests",
+                "requests awaiting an admission window",
+            )
+            # plan-stage timings ride the same hub (PlanCache checks
+            # its ``obs`` on every launch/finalize)
+            if hasattr(index, "plans"):
+                index.plans.obs = self.obs
 
     # -- admission ---------------------------------------------------------
+
+    def set_quota(self, tenant: str, qps: float,
+                  burst: float | None = None) -> None:
+        """Arm a token-bucket admission quota (queries/second with
+        ``burst`` headroom) for ``tenant``.  Requests beyond the budget
+        are rejected at submit; other tenants are unaffected (each
+        bucket is independent)."""
+        self.tenants.set_quota(tenant, qps, burst=burst)
 
     def submit(
         self,
@@ -138,8 +212,16 @@ class QueryEngine:
         filter=None,
         adaptive: bool | None = None,
         deadline_ms: float | None = None,
+        tenant: str = DEFAULT_TENANT,
     ) -> int:
-        """Queue a request; returns a ticket id for :meth:`result`."""
+        """Queue a request; returns a ticket id for :meth:`result`.
+
+        ``tenant`` selects the SLO account (and quota bucket, if one is
+        armed).  A quota-rejected request completes immediately with
+        status ``"rejected"`` and -1/-inf results — the ticket id is
+        still valid for :meth:`result`, so callers observe rejection as
+        a fast, attributed failure rather than an exception.
+        """
         q = np.atleast_2d(np.asarray(queries, dtype=np.float32))
         now = self.clock()
         t = QueryTicket(
@@ -155,13 +237,34 @@ class QueryEngine:
             submitted=now,
             deadline=(now + deadline_ms / 1e3
                       if deadline_ms is not None else None),
+            tenant=tenant,
+            trace_id=(self.obs.tracer.new_trace()
+                      if self.obs is not None else 0),
         )
         self._next_id += 1
-        self._pending.append(t)
         self._tickets[t.id] = t
         self.stats.requests += 1
         self.stats.queries += len(q)
+        if not self.tenants.admit(tenant, len(q), now):
+            self._finish_rejected(t)
+            return t.id
+        self._pending.append(t)
+        if self.obs is not None:
+            self._m_queue.set(len(self._pending))
         return t.id
+
+    def _finish_rejected(self, t: QueryTicket) -> None:
+        k = t.kwargs["k"]
+        nq = len(t.queries)
+        self._results[t.id] = (
+            np.full((nq, k), -1, np.int32),
+            np.full((nq, k), -np.inf, np.float32),
+        )
+        t.status = "rejected"
+        t.latency = 0.0
+        self.stats.rejected += 1
+        if self.obs is not None:
+            self._m_requests.inc(tenant=t.tenant, status="rejected")
 
     # -- one admission window ----------------------------------------------
 
@@ -173,12 +276,22 @@ class QueryEngine:
         admitted, self._pending = self._pending, []
         self.stats.windows += 1
         now = self.clock()
+        tracer = self.obs.tracer if self.obs is not None else None
+        window_t0 = tracer.clock() if tracer is not None else 0.0
 
         # 1+2: plan resolution + deadline degradation, group by plan
         groups: dict[tuple, list] = {}
         ctxs: dict[tuple, PlanContext] = {}
         completed = 0
+        coalesce_t0 = tracer.clock() if tracer is not None else 0.0
         for t in admitted:
+            if tracer is not None:
+                # admission span: submit -> window start (queue wait,
+                # on the engine clock — same clock as ``latency``)
+                tracer.record(Span(
+                    "admission", t.trace_id, t.submitted, end=now,
+                    attrs={"tenant": t.tenant},
+                ))
             if t.deadline is not None and now > t.deadline:
                 self._finish_dropped(t)
                 completed += 1
@@ -193,10 +306,24 @@ class QueryEngine:
                     t.degraded += 1
                 if t.degraded:
                     self.stats.degraded += 1
+                    if self.obs is not None:
+                        self._m_degraded.inc(tenant=t.tenant)
+                        mark = tracer.clock()
+                        tracer.record(Span(
+                            "degrade", t.trace_id, mark, end=mark,
+                            attrs={"rungs": t.degraded,
+                                   "ef": plan.ef,
+                                   "tenant": t.tenant},
+                        ))
             t.plan = plan
             key = (plan, t.filter_key)
             groups.setdefault(key, []).append(t)
             ctxs.setdefault(key, ctx)
+        if tracer is not None:
+            tracer.record(Span(
+                "coalesce", 0, coalesce_t0,
+                attrs={"requests": len(admitted), "groups": len(groups)},
+            ))
 
         # 3+4: coalesce each group and launch all before finalizing any
         # (async dispatch overlaps group i+1's transfer with group i)
@@ -205,13 +332,28 @@ class QueryEngine:
             plan = key[0]
             qcat = np.concatenate([t.queries for t in tickets])
             t0 = self.clock()
-            pending = self.index.plans.launch(plan, ctxs[key], qcat)
+            if tracer is not None:
+                with tracer.span("launch", tickets[0].trace_id,
+                                 plan=plan.signature(),
+                                 queries=len(qcat)):
+                    pending = self.index.plans.launch(
+                        plan, ctxs[key], qcat
+                    )
+            else:
+                pending = self.index.plans.launch(plan, ctxs[key], qcat)
             launches.append((plan, tickets, pending, t0))
             self.stats.batches += 1
+            if self.obs is not None:
+                self._m_batches.inc()
 
         # 5: sync, scatter, account
         for plan, tickets, pending, t0 in launches:
-            ids, scores = self.index.plans.finalize(pending)
+            if tracer is not None:
+                with tracer.span("finalize", tickets[0].trace_id,
+                                 plan=plan.signature()):
+                    ids, scores = self.index.plans.finalize(pending)
+            else:
+                ids, scores = self.index.plans.finalize(pending)
             t_done = self.clock()
             self._observe(plan, t_done - t0)
             row = 0
@@ -224,7 +366,28 @@ class QueryEngine:
                 t.latency = t_done - t.submitted
                 self.stats.done += 1
                 self.stats.latencies.append(t.latency)
+                self.tenants.observe(
+                    t.tenant, status="done", latency=t.latency,
+                    degraded=bool(t.degraded),
+                )
+                if self.obs is not None:
+                    self._m_requests.inc(tenant=t.tenant, status="done")
+                    tracer.record(Span(
+                        "request", t.trace_id, t.submitted,
+                        end=t.submitted + t.latency,
+                        attrs={"tenant": t.tenant,
+                               "plan": plan.signature(),
+                               "status": "done"},
+                    ))
                 completed += 1
+        if self.obs is not None:
+            self._m_windows.inc()
+            self._m_queue.set(len(self._pending))
+            tracer.record(Span(
+                "window", 0, window_t0,
+                attrs={"requests": len(admitted),
+                       "batches": len(launches)},
+            ))
         return completed
 
     def _finish_dropped(self, t: QueryTicket) -> None:
@@ -237,6 +400,10 @@ class QueryEngine:
         t.status = "dropped"
         t.latency = self.clock() - t.submitted
         self.stats.dropped += 1
+        self.tenants.observe(t.tenant, status="dropped",
+                             latency=t.latency)
+        if self.obs is not None:
+            self._m_requests.inc(tenant=t.tenant, status="dropped")
 
     def _estimate(self, plan: QueryPlan) -> float:
         """EWMA batch latency for ``plan`` (0.0 until first observed —
@@ -310,8 +477,14 @@ class QueryEngine:
 
     def stats_report(self) -> dict:
         """``memory_breakdown``-style serving report: request counters,
-        latency percentiles, plan-cache behaviour, retraces."""
-        lat = np.asarray(self.stats.latencies, dtype=np.float64)
+        window latency percentiles, per-tenant SLO accounts, lifecycle
+        span aggregates, plan-cache behaviour, retraces.
+
+        Percentiles are over the bounded latency ring (the last
+        ``latency_window`` requests), so a long-running engine reports
+        its *current* tail, not its lifetime-averaged one.
+        """
+        lat = self.stats.latencies
         out = {
             "requests": self.stats.requests,
             "queries": self.stats.queries,
@@ -320,11 +493,14 @@ class QueryEngine:
             "done": self.stats.done,
             "dropped": self.stats.dropped,
             "degraded": self.stats.degraded,
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size
-            else None,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size
-            else None,
+            "rejected": self.stats.rejected,
+            "latency_window": lat.maxlen,
+            "p50_ms": (lat.percentile(50) * 1e3) if len(lat) else None,
+            "p99_ms": (lat.percentile(99) * 1e3) if len(lat) else None,
         }
+        out["tenant_report"] = self.tenants.report()
+        if self.obs is not None:
+            out["span_report"] = self.obs.tracer.report()
         out.update(
             {f"plan_{k}": v for k, v in self.index.plans.report().items()}
         )
@@ -332,6 +508,14 @@ class QueryEngine:
             self.index.plans.trace_prefix()
         )
         return out
+
+    def emit_report(self) -> dict:
+        """Push one ``stats_report`` snapshot through the hub's sinks
+        (the :class:`~repro.obs.PeriodicReporter` calls this)."""
+        report = self.stats_report()
+        if self.obs is not None:
+            return self.obs.emit({"stats_report": report})
+        return report
 
 
 @dataclasses.dataclass

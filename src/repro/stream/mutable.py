@@ -263,6 +263,9 @@ class MutableQuIVerIndex:
         self.policy = policy
         self.report = report
         self.probe_acc = ProbeAccumulator(dim)
+        # optional probe-drift monitor (DESIGN.md §12): re-scores the
+        # accumulator against the calibrated bands after every mutation
+        self.drift_monitor = None
 
     # -- constructors ------------------------------------------------------
 
@@ -407,6 +410,49 @@ class MutableQuIVerIndex:
             strong_entropy=self.probe_acc.strong_entropy,
         )
 
+    # -- drift alarms (DESIGN.md §12) --------------------------------------
+
+    def attach_drift_monitor(self, monitor=None, *, tenant="default",
+                             registry=None, **monitor_kw):
+        """Arm probe-drift alarms: after every insert/delete/consolidate
+        batch the accumulator's exact bit-plane stats are re-scored
+        against the calibrated green/amber/red thresholds
+        (:class:`repro.obs.DriftMonitor`) and band crossings raise
+        alarms through the metrics layer.
+
+        Pass a prebuilt monitor, or kwargs to build one over this
+        index's accumulator (thresholds default to the build-time probe
+        report's, keeping the live banding consistent with the verdict
+        that chose the nav policy).  Returns the armed monitor.
+        """
+        if monitor is None:
+            from repro.obs import DriftMonitor
+            if "thresholds" not in monitor_kw and self.report is not None:
+                monitor_kw["thresholds"] = self.report.thresholds
+            monitor = DriftMonitor(
+                self.probe_acc, tenant=tenant, registry=registry,
+                **monitor_kw,
+            )
+        self.drift_monitor = monitor
+        monitor.check()                     # establish the current band
+        return monitor
+
+    def _note_mutation(self, kind: str, count: int):
+        """Mutation telemetry + drift re-score (one owner: insert,
+        delete and consolidate all funnel through here)."""
+        from repro.obs.metrics import get_default_registry
+        reg = get_default_registry()
+        reg.counter(
+            "quiver_stream_mutations_total",
+            "streaming mutations by kind", labels=("kind",),
+        ).inc(count, kind=kind)
+        reg.gauge(
+            "quiver_stream_live_rows", "live rows in mutable indexes",
+        ).set(self.n_live)
+        if self.drift_monitor is not None:
+            return self.drift_monitor.check()
+        return None
+
     # -- introspection -----------------------------------------------------
 
     @property
@@ -538,6 +584,7 @@ class MutableQuIVerIndex:
         self._consolidate_overflow()
         self.stats.inserts += len(ids)
         self.generation += 1
+        self._note_mutation("insert", len(ids))
         return ids
 
     def delete(self, ids) -> int:
@@ -563,6 +610,7 @@ class MutableQuIVerIndex:
             self.labels.clear(ids)
         self.stats.deletes += int(was_live)
         self.generation += 1
+        self._note_mutation("delete", int(was_live))
         return int(was_live)
 
     def _batched_rows(self, rows: np.ndarray, op) -> None:
@@ -653,6 +701,7 @@ class MutableQuIVerIndex:
         self.stats.rows_repaired += report["repaired_rows"]
         self.stats.slots_reclaimed += report["reclaimed"]
         self.generation += 1
+        self._note_mutation("consolidate", 1)
         return report
 
     # -- search ------------------------------------------------------------

@@ -163,6 +163,20 @@ class StreamingShardedIndex:
         """Per-shard repair + reclamation (embarrassingly parallel)."""
         return [s.consolidate() for s in self.shards]
 
+    def attach_drift_monitors(self, *, tenant="default", registry=None,
+                              **monitor_kw) -> list:
+        """Arm per-shard probe-drift alarms (DESIGN.md §12).  Each shard
+        gets its own monitor over its own live-set accumulator, labelled
+        ``{tenant}/shard{i}`` so a single drifting shard is attributable
+        on the fleet scrape.  Returns the monitors in shard order."""
+        return [
+            s.attach_drift_monitor(
+                tenant=f"{tenant}/shard{i}", registry=registry,
+                **monitor_kw,
+            )
+            for i, s in enumerate(self.shards)
+        ]
+
     # -- applicability probe (DESIGN.md §10) -------------------------------
 
     def probe_report(self, **probe_kw) -> CompatibilityReport:
