@@ -254,6 +254,238 @@ def make_sharded_search(mesh: Mesh, *, dim: int, ef: int, k: int,
     )
 
 
+# -- IVF targeted scatter (DESIGN.md §13) ---------------------------------
+#
+# The coarse lists double as the fleet's shard unit: whole inverted
+# lists are placed on shards (greedy balance by population), the tiny
+# centroid tier is replicated everywhere, and a query is scattered only
+# to the shards owning its top-p lists — at most min(p, S) of them —
+# instead of the all-shard fan-out above.  The scatter is host-driven
+# (each contacted shard runs one compiled fused list-scan + rerank
+# step over its own arrays), which is exactly the multi-host serving
+# shape: routing on the frontend, one RPC per contacted shard.
+
+
+class IVFShard(NamedTuple):
+    """One shard's slice of a list-partitioned corpus."""
+
+    sig_words: jnp.ndarray    # (n_s, 2W) uint32
+    vectors: jnp.ndarray      # (n_s, D) float32 (cold/rerank tier)
+    ids: np.ndarray           # (n_s,) int32 global corpus ids
+    list_ids: jnp.ndarray     # (L_s, cap_s) int32 LOCAL slots, -1 pad
+    lists: np.ndarray         # (L_s,) int32 global list ids owned
+
+
+class IVFShardedIndex(NamedTuple):
+    """List-partitioned fleet: replicated routing tier + per-shard
+    member slices.  ``list_shard``/``list_local`` map a global list id
+    to (owning shard, local list index) — the scatter's routing table.
+    """
+
+    cent_words: jnp.ndarray   # (L, 2W) uint32, replicated
+    list_shard: np.ndarray    # (L,) int32 owning shard per list
+    list_local: np.ndarray    # (L,) int32 local index within owner
+    shards: tuple             # tuple[IVFShard, ...]
+    dim: int
+    default_probes: int
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_lists(self) -> int:
+        return int(self.cent_words.shape[0])
+
+
+def build_ivf_sharded(vectors: np.ndarray, n_shards: int, *,
+                      n_lists: int | None = None,
+                      seed: int = 0) -> IVFShardedIndex:
+    """Partition by coarse list, then place whole lists on shards.
+
+    One global :func:`repro.ivf.build_partition` over the corpus
+    signatures, then greedy balance: lists in descending population
+    order each go to the currently lightest shard, so shard loads stay
+    within one max-list of each other without splitting any list (a
+    list never spans shards — that is what makes the scatter targeted).
+    """
+    from repro.ivf import build_partition
+
+    v = np.asarray(vectors, dtype=np.float32)
+    v = v / np.maximum(
+        np.linalg.norm(v, axis=-1, keepdims=True), 1e-12
+    )
+    sigs = bq.encode(jnp.asarray(v))
+    part = build_partition(sigs, n_lists=n_lists, seed=seed)
+    L = part.n_lists
+    n_shards = max(1, min(n_shards, L))
+    counts = np.diff(part.offsets)
+
+    # greedy balance by population, descending
+    order = np.argsort(-counts, kind="stable")
+    load = np.zeros(n_shards, dtype=np.int64)
+    list_shard = np.empty(L, dtype=np.int32)
+    for lst in order:
+        s = int(np.argmin(load))
+        list_shard[lst] = s
+        load[s] += counts[lst]
+    list_local = np.empty(L, dtype=np.int32)
+
+    shards = []
+    for s in range(n_shards):
+        owned = np.nonzero(list_shard == s)[0].astype(np.int32)
+        list_local[owned] = np.arange(owned.size, dtype=np.int32)
+        member_chunks = [
+            part.member_ids[part.offsets[l]:part.offsets[l + 1]]
+            for l in owned
+        ]
+        ids = (np.concatenate(member_chunks) if member_chunks
+               else np.empty((0,), np.int32)).astype(np.int32)
+        slot_of = {}
+        cap = max(8, int(-(-max(
+            (len(c) for c in member_chunks), default=1) // 8) * 8))
+        local = np.full((max(owned.size, 1), cap), -1, dtype=np.int32)
+        pos = 0
+        for i, chunk_ids in enumerate(member_chunks):
+            local[i, :len(chunk_ids)] = np.arange(
+                pos, pos + len(chunk_ids), dtype=np.int32
+            )
+            pos += len(chunk_ids)
+        del slot_of
+        shards.append(IVFShard(
+            sig_words=sigs.words[jnp.asarray(
+                ids if ids.size else np.zeros((1,), np.int32)
+            )],
+            vectors=jnp.asarray(
+                v[ids] if ids.size else v[:1] * 0.0
+            ),
+            ids=ids,
+            list_ids=jnp.asarray(local),
+            lists=owned,
+        ))
+    return IVFShardedIndex(
+        cent_words=part.cent_words,
+        list_shard=list_shard,
+        list_local=list_local,
+        shards=tuple(shards),
+        dim=vectors.shape[-1],
+        default_probes=part.default_probes,
+    )
+
+
+def _ivf_shard_step(dim: int, ef: int, k: int):
+    """Compiled per-shard scatter step: fused local list scan + rerank."""
+
+    def step(sig_words, vectors, list_ids, probe_local, reprs, queries):
+        backend = make_backend("bq2", MetricArrays(
+            sigs=bq.Signature(words=sig_words, dim=dim),
+            vectors=vectors,
+        ))
+        q = probe_local.shape[0]
+        mem = list_ids[jnp.maximum(probe_local, 0)].reshape(q, -1)
+        valid = (
+            (probe_local >= 0).repeat(list_ids.shape[1], axis=-1)
+            & (mem >= 0)
+        )
+        d = backend.dist_many(reprs, jnp.maximum(mem, 0), valid)
+        d = jnp.where(valid, d, _INF)
+        ef_eff = min(ef, mem.shape[1])
+        neg, pos = jax.lax.top_k(-d, ef_eff)
+        ids = jnp.take_along_axis(mem, pos, axis=-1)
+        ids = jnp.where(-neg < _INF / 2, ids, -1)
+        return rerank_f32(ids, queries, vectors, k)
+
+    return jax.jit(step)
+
+
+_INF = jnp.float32(3.0e38)
+_IVF_STEP_CACHE: dict = {}
+
+
+def search_ivf_sharded(index: IVFShardedIndex, queries: np.ndarray, *,
+                       k: int = 10, ef: int = 64,
+                       probes: int | None = None,
+                       broadcast: bool = False,
+                       registry=None):
+    """Targeted scatter over the list-partitioned fleet.
+
+    Routes each query on the replicated centroid tier, contacts only
+    the shards owning its top-p lists (≤ min(p, S) of them; shards a
+    query does not route to never see it), and merges the per-shard
+    reranked top-k by cosine score — the IVF analogue of
+    :func:`search_sharded`'s all-shard fan-out.
+
+    ``broadcast=True`` sends every query to every shard (non-probed
+    lists stay masked out) — the all-shard baseline the targeted path
+    is equivalence-tested against.  Per-list route counters and the
+    shards-contacted histogram land on ``registry`` (default process
+    registry).  Returns (global ids (Q, k), cosine scores (Q, k)).
+    """
+    from repro.core.beam import batch_bucket, pad_rows
+    from repro.ivf import record_routes, top_lists
+    from repro.kernels import dispatch
+
+    q = jnp.asarray(queries, jnp.float32)
+    if q.ndim == 1:
+        q = q[None]
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    nq = q.shape[0]
+    reprs = encode_queries_for("bq2", q)
+    p = probes or index.default_probes
+    p = max(1, min(p, index.n_lists))
+
+    ops = dispatch.list_scan_ops(index.dim)
+    top = np.asarray(top_lists(ops.scan, reprs, index.cent_words, p))
+    shard_of = index.list_shard[top]                       # (Q, p)
+    contacted_per_q = np.array([
+        len(np.unique(row)) for row in shard_of
+    ])
+    record_routes(top, contacted_per_q, registry=registry)
+
+    all_ids = np.full((nq, index.n_shards, k), -1, dtype=np.int64)
+    all_scores = np.full((nq, index.n_shards, k), -np.inf,
+                         dtype=np.float32)
+    for s, shard in enumerate(index.shards):
+        if broadcast:
+            rows = np.arange(nq)
+        else:
+            rows = np.nonzero((shard_of == s).any(axis=-1))[0]
+        if rows.size == 0 or shard.ids.size == 0:
+            continue                     # targeted: shard never contacted
+        # local probe table: this shard's local index for each probed
+        # list it owns, -1 elsewhere (masked inside the fused step)
+        sub = top[rows]
+        probe_local = np.where(
+            index.list_shard[sub] == s, index.list_local[sub], -1
+        ).astype(np.int32)
+        bucket = batch_bucket(rows.size, 256)
+        key = (s, shard.sig_words.shape, shard.list_ids.shape,
+               bucket, p, ef, k, index.dim)
+        step = _IVF_STEP_CACHE.get(key)
+        if step is None:
+            step = _ivf_shard_step(index.dim, ef, k)
+            _IVF_STEP_CACHE[key] = step
+        ids, scores = step(
+            shard.sig_words, shard.vectors, shard.list_ids,
+            pad_rows(jnp.asarray(probe_local), bucket),
+            pad_rows(reprs[jnp.asarray(rows)], bucket),
+            pad_rows(q[jnp.asarray(rows)], bucket),
+        )
+        ids = np.asarray(ids[:rows.size])
+        scores = np.asarray(scores[:rows.size])
+        gids = np.where(ids >= 0, shard.ids[np.maximum(ids, 0)], -1)
+        all_ids[rows, s] = gids
+        all_scores[rows, s] = np.where(ids >= 0, scores, -np.inf)
+
+    flat_ids = all_ids.reshape(nq, -1)
+    flat_scores = all_scores.reshape(nq, -1)
+    order = np.argsort(-flat_scores, axis=-1)[:, :k]
+    out_scores = np.take_along_axis(flat_scores, order, axis=-1)
+    out_ids = np.take_along_axis(flat_ids, order, axis=-1)
+    out_ids[~np.isfinite(out_scores)] = -1
+    return out_ids, out_scores
+
+
 def sharded_count_fn(index: ShardedIndex):
     """``label -> member popcount`` across all shards.
 

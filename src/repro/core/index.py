@@ -42,6 +42,7 @@ from repro.filter import (
     LabelStore,
     build_label_entries,
 )
+from repro.ivf import IVFPartition, build_partition
 from repro.plan.cache import PlanCache
 from repro.plan.planner import resolve_plan
 from repro.probe import (
@@ -51,7 +52,10 @@ from repro.probe import (
     select_policy,
 )
 
-NavKind = Literal["bq2", "bq1", "adc", "float32"]
+# "ivf" is a navigation *family*, not a build metric: the graph (and
+# the partition) live in bq2 space; serving scans top-p coarse lists
+# instead of traversing (DESIGN.md §13)
+NavKind = Literal["bq2", "bq1", "adc", "float32", "ivf"]
 
 # BuildParams persistence: one named npz field per dataclass field (the
 # old format was a positional int64 array — brittle, and alpha had to be
@@ -119,6 +123,10 @@ class QuIVerIndex:
     # persist through save/load so a loaded index keeps its schedule.
     policy: NavPolicy | None = None
     report: CompatibilityReport | None = None
+    # IVF-over-BQ coarse partition (repro.ivf, DESIGN.md §13): present
+    # when built with ``ivf_candidates`` or attached via ``build_ivf``;
+    # enables the ``nav="ivf"`` plan family and targeted scatter
+    ivf: IVFPartition | None = None
     # backends are constructed once per nav kind and cached: kernel
     # dispatch happens at construction, and beam-search jit caches key on
     # the backend instance, so reusing it avoids re-trace per query batch.
@@ -195,15 +203,33 @@ class QuIVerIndex:
             report = probe_corpus(
                 encoded, sample=probe_sample, seed=probe_seed
             )
-            policy = select_policy(report, have_vectors=keep_vectors)
+            policy = select_policy(
+                report, have_vectors=keep_vectors,
+                have_ivf=params.ivf_candidates,
+            )
             metric = policy.nav
             if verbose:
                 print(f"[probe] {report.summary()} -> {policy.describe()}")
+        if metric == "ivf":
+            # "ivf" is a nav family over a bq2-built graph + partition,
+            # not a construction metric; the policy carries the default
+            if policy is None:
+                policy = NavPolicy(nav="ivf", source="manual")
+            metric = "bq2"
         sigs = bq.encode(encoded)
+        ivf = None
+        if params.ivf_candidates or (
+            policy is not None and policy.nav == "ivf"
+        ):
+            ivf = build_partition(
+                sigs, n_lists=params.ivf_lists or None, seed=params.seed
+            )
         backend = make_backend(
             metric, MetricArrays(sigs=sigs, vectors=vectors)
         )
-        adj, medoid, stats = build_graph(backend, params, verbose=verbose)
+        adj, medoid, stats = build_graph(
+            backend, params, ivf=ivf, verbose=verbose
+        )
         return cls(
             sigs=sigs,
             adjacency=adj,
@@ -215,7 +241,20 @@ class QuIVerIndex:
             metric_kind=metric,
             policy=policy,
             report=report,
+            ivf=ivf,
         )
+
+    def build_ivf(
+        self, *, n_lists: int | None = None, seed: int | None = None
+    ) -> IVFPartition:
+        """Attach a coarse partition post-hoc (enables ``nav="ivf"``
+        and targeted scatter on an index built without one).
+        Deterministic under the build seed unless ``seed`` overrides."""
+        self.ivf = build_partition(
+            self.sigs, n_lists=n_lists,
+            seed=self.params.seed if seed is None else seed,
+        )
+        return self.ivf
 
     # -- labels (filtered search, DESIGN.md §9) ----------------------------
 
@@ -255,8 +294,17 @@ class QuIVerIndex:
         filter=None,
         selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR,
         adaptive: bool | None = None,
+        probes: int | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """(Q, D) float32 queries -> ((Q, k) ids, (Q, k) scores).
+
+        ``nav="ivf"`` (or an ivf :class:`NavPolicy` default) routes
+        through the coarse-list family (DESIGN.md §13): scan the
+        centroid signatures, gather the members of the ``probes``
+        nearest lists (default: the partition's √L), keep the best
+        ``ef`` in bq2 space and rerank — no graph traversal.
+        Escalation widens ``probes``; all other knobs compose as on
+        the graph route.
 
         Score scale: with ``rerank=True`` (and cold vectors present)
         scores are exact float32 **cosine similarity** in [-1, 1]; with
@@ -301,6 +349,7 @@ class QuIVerIndex:
             self, k=k, ef=ef, rerank=rerank, nav=nav, expand=expand,
             query_batch=query_batch, filter=filter,
             selectivity_floor=selectivity_floor, adaptive=adaptive,
+            probes=probes,
         )
         return self.plans.run(plan, ctx, queries)
 
@@ -313,12 +362,16 @@ class QuIVerIndex:
         label_bytes = (
             self.labels.memory_bytes() if self.labels is not None else 0
         )
+        # the IVF tier (centroid signatures + padded list layout) rides
+        # the hot path: every ivf plan gathers from it per query
+        ivf_bytes = self.ivf.memory_bytes() if self.ivf is not None else 0
         cold = self.vectors.size * 4 if self.vectors is not None else 0
-        hot = sig_bytes + adj_bytes + label_bytes
+        hot = sig_bytes + adj_bytes + label_bytes + ivf_bytes
         out = {
             "hot_signature_bytes": int(sig_bytes),
             "hot_adjacency_bytes": int(adj_bytes),
             "hot_label_bytes": int(label_bytes),
+            "hot_ivf_bytes": int(ivf_bytes),
             "hot_total_bytes": int(hot),
             "cold_vector_bytes": int(cold),
             "total_bytes": int(hot + cold),
@@ -344,6 +397,8 @@ class QuIVerIndex:
             probe_fields.update(self.policy.to_npz_fields())
         if self.report is not None:
             probe_fields.update(self.report.to_npz_fields())
+        if self.ivf is not None:
+            probe_fields.update(self.ivf.to_npz_fields())
         np.savez_compressed(
             path,
             words=np.asarray(self.sigs.words),
@@ -391,6 +446,7 @@ class QuIVerIndex:
             labels=LabelStore.from_npz(z),
             policy=NavPolicy.from_npz(z),
             report=CompatibilityReport.from_npz(z),
+            ivf=IVFPartition.from_npz(z),
         )
 
 

@@ -177,6 +177,26 @@ def consolidate_rows(
     return scatter_rows(adj, deg, row_ids, new_ids, r_total=r_total)
 
 
+def shard_medoids(
+    backend: MetricSpace,
+    cent_reprs,                   # (L, ...) query representations
+    shard_ids,                    # (L, S) int32, -1 padded
+):
+    """Batched shard-restricted medoid selection.
+
+    The vectorized form of :func:`medoid_scan`: for each of L random
+    shards, pick the member nearest its shard centroid representation.
+    One ``dist_many`` call scores all (L, S) members at once — this is
+    how the IVF layer picks k-means-free centroids (DESIGN.md §13).
+    Returns (L,) int32 medoid node ids.
+    """
+    valid = shard_ids >= 0
+    d = backend.dist_many(cent_reprs, jnp.maximum(shard_ids, 0), valid)
+    d = jnp.where(valid, d, BIG)
+    best = jnp.argmin(d, axis=-1)
+    return jnp.take_along_axis(shard_ids, best[:, None], axis=-1)[:, 0]
+
+
 def medoid_scan(
     backend: MetricSpace,
     centroid_repr,

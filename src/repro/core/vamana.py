@@ -55,6 +55,14 @@ class BuildParams:
     passes: int = 1              # full insertion passes over the data
     seed: int = 0
     beam_expand: int = 1         # beam expansion width L during build
+    # IVF-seeded construction (DESIGN.md §13): seed each chunk's prune
+    # pool from the node's top-p coarse lists instead of a full-graph
+    # beam search — the dominant per-chunk cost drops from
+    # O(hops·ef·R) graph traversal to one list scan + one gather,
+    # making build time near-linear in N.  ``ivf_lists=0`` means the
+    # partition's own √N default.
+    ivf_candidates: bool = False
+    ivf_lists: int = 0
 
     @property
     def r(self) -> int:          # out-degree bound
@@ -94,6 +102,57 @@ def _chunk_forward(
         backend, adj, chunk_ids, medoid,
         ef=ef, pool=pool, r=r, alpha=alpha, n=n, expand=expand,
     )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "scan", "pool", "r", "alpha", "probes"),
+)
+def _chunk_forward_ivf(
+    chunk_ids, rand_ids, sig_words, cent_words, list_ids, *,
+    backend: MetricBackend, scan, pool, r, alpha, probes,
+):
+    """IVF-seeded chunk linking: top-p lists feed the prune pool.
+
+    Replaces the beam search of :func:`_chunk_forward`: each chunk
+    node's candidates are the members of its ``probes`` nearest coarse
+    lists (scored in the build metric), topped up with ``rand_ids`` —
+    random far candidates whose long edges the alpha-criterion can
+    keep, preserving navigability that purely local list members would
+    lose.  Duplicates between the two pools die in the prune (a
+    duplicate is distance-0 from its selected twin).  Hops are 0 by
+    construction — there is no traversal.
+    """
+    from repro.ivf import search as ivf_search
+
+    pad_row = (chunk_ids < 0)[:, None]
+    safe_chunk = jnp.maximum(chunk_ids, 0)
+    reprs = backend.query_repr(safe_chunk)
+    top = ivf_search.top_lists(scan, sig_words[safe_chunk], cent_words,
+                               probes)
+    mem, d = ivf_search.list_candidates(backend, reprs, list_ids, top)
+    drop = (mem == chunk_ids[:, None]) | pad_row
+    mem = jnp.where(drop, -1, mem)
+    d = jnp.where(drop, BIG, d)
+    n_rand = rand_ids.shape[1]
+    neg, pos = jax.lax.top_k(-d, max(pool - n_rand, 1))
+    local_ids = jnp.take_along_axis(mem, pos, axis=-1)
+    local_dists = -neg
+
+    rand_ok = (rand_ids >= 0) & (rand_ids != chunk_ids[:, None]) & ~pad_row
+    rd = backend.dist_many(reprs, jnp.maximum(rand_ids, 0), rand_ok)
+    cids = jnp.concatenate(
+        [local_ids, jnp.where(rand_ok, rand_ids, -1)], axis=-1
+    )
+    cdists = jnp.concatenate(
+        [local_dists, jnp.where(rand_ok, rd, BIG)], axis=-1
+    )
+    pw = backend.pairwise(jnp.maximum(cids, 0))
+    fwd_ids, fwd_dists = linking.alpha_prune_batch(
+        cids, cdists, pw, r=r, alpha=alpha
+    )
+    hops = jnp.zeros(chunk_ids.shape, dtype=jnp.int32)
+    return fwd_ids, fwd_dists, hops
 
 
 @functools.partial(jax.jit, static_argnames=("r_total",))
@@ -145,9 +204,21 @@ def build_graph(
     params: BuildParams,
     *,
     medoid: int | None = None,
+    ivf=None,
     verbose: bool = False,
 ) -> tuple[jnp.ndarray, int, BuildStats]:
     """Construct a Vamana graph in ``backend``'s metric space.
+
+    With ``params.ivf_candidates`` each chunk's prune pool is seeded
+    from the node's top-p coarse lists (:mod:`repro.ivf`) instead of a
+    full-graph beam search — near-linear build.  ``ivf`` is the
+    :class:`~repro.ivf.IVFPartition` to seed from; when None it is
+    built here from the backend's signatures (requires a
+    signature-bearing build metric).
+
+    Build stats accumulate **on device** (one lazy add per chunk) and
+    materialize once at the end — the host loop never blocks on a
+    device→host sync per chunk.
 
     Returns (adjacency (N, R+slack) int32, medoid id, stats).
     """
@@ -164,9 +235,33 @@ def build_graph(
             if centroid is not None else 0
     medoid_arr = jnp.int32(medoid)
 
+    scan = sig_words = probes = n_rand = None
+    if params.ivf_candidates:
+        if not hasattr(backend, "sigs"):
+            raise ValueError(
+                "ivf_candidates needs a signature-bearing build metric "
+                "(bq2/bq1/adc); float32 builds must beam-search"
+            )
+        if ivf is None:
+            from repro.ivf import build_partition
+            ivf = build_partition(
+                backend.sigs, n_lists=params.ivf_lists or None,
+                seed=params.seed,
+            )
+        from repro.kernels import dispatch
+        route = getattr(backend, "route", None)
+        scan = dispatch.list_scan_ops(backend.sigs.dim, route=route).scan
+        sig_words = backend.sigs.words
+        probes = ivf.build_probes
+        n_rand = max(1, min(params.prune_pool // 4, params.r))
+
     rng = np.random.default_rng(params.seed)
     chunk = params.chunk
-    hops_acc = []
+    # device-side accumulators: eager jnp adds are async-dispatched, so
+    # the loop enqueues work without a per-chunk host round trip
+    added_acc = jnp.int32(0)
+    hops_sum = jnp.float32(0.0)
+    n_hop_chunks = 0
 
     for pass_idx in range(params.passes):
         order = rng.permutation(n).astype(np.int32)
@@ -177,16 +272,31 @@ def build_graph(
 
         for ci in range(n_chunks):
             chunk_ids = jnp.asarray(order[ci * chunk:(ci + 1) * chunk])
-            fwd_ids, fwd_dists, hops = _chunk_forward(
-                adj, chunk_ids, medoid_arr,
-                backend=backend,
-                ef=params.ef_construction,
-                pool=params.prune_pool,
-                r=params.r,
-                alpha=params.alpha,
-                n=n,
-                expand=params.beam_expand,
-            )
+            if params.ivf_candidates:
+                rand_ids = jnp.asarray(rng.integers(
+                    0, n, size=(chunk, n_rand), dtype=np.int32
+                ))
+                fwd_ids, fwd_dists, hops = _chunk_forward_ivf(
+                    chunk_ids, rand_ids, sig_words,
+                    ivf.cent_words, ivf.list_ids,
+                    backend=backend,
+                    scan=scan,
+                    pool=params.prune_pool,
+                    r=params.r,
+                    alpha=params.alpha,
+                    probes=probes,
+                )
+            else:
+                fwd_ids, fwd_dists, hops = _chunk_forward(
+                    adj, chunk_ids, medoid_arr,
+                    backend=backend,
+                    ef=params.ef_construction,
+                    pool=params.prune_pool,
+                    r=params.r,
+                    alpha=params.alpha,
+                    n=n,
+                    expand=params.beam_expand,
+                )
             adj, deg = _apply_forward(
                 adj, deg, chunk_ids, fwd_ids, r_total=params.r_total
             )
@@ -194,8 +304,9 @@ def build_graph(
                 adj, deg, chunk_ids, fwd_ids, r_total=params.r_total
             )
             stats.chunks += 1
-            stats.reverse_edges_added += int(added)
-            hops_acc.append(float(hops.mean()))
+            added_acc = added_acc + added
+            hops_sum = hops_sum + hops.mean()
+            n_hop_chunks += 1
 
             if (ci + 1) % params.consolidate_every == 0:
                 adj, deg, did = _consolidate_overflow(
@@ -203,15 +314,21 @@ def build_graph(
                 )
                 stats.consolidations += did
             if verbose and ci % 16 == 0:
+                # verbose is the debug path: the sync it forces is the
+                # point (live numbers), so it is allowed to block
                 print(
                     f"[vamana] pass {pass_idx} chunk {ci}/{n_chunks} "
-                    f"hops={hops_acc[-1]:.1f}"
+                    f"hops={float(hops.mean()):.1f}"
                 )
 
     adj, deg, did = _consolidate_overflow(adj, deg, backend, params, chunk)
     stats.consolidations += did
+    # single materialization of the device accumulators
+    stats.reverse_edges_added = int(added_acc)
+    stats.mean_hops = (
+        float(hops_sum) / n_hop_chunks if n_hop_chunks else 0.0
+    )
     stats.seconds = time.perf_counter() - t0
-    stats.mean_hops = float(np.mean(hops_acc)) if hops_acc else 0.0
     return adj, int(medoid), stats
 
 

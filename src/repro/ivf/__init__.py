@@ -1,0 +1,29 @@
+"""IVF-over-BQ coarse routing (DESIGN.md §13).
+
+Training-free inverted lists in 2-bit Sign-Magnitude space: BQ-medoid
+centroids, contiguous list layout, and kernel-dispatched list scans —
+the build accelerator (``BuildParams(ivf_candidates=True)``), the
+``nav="ivf"`` plan family, and the targeted-scatter shard unit.
+"""
+
+from repro.ivf.partition import (
+    IVFPartition,
+    build_partition,
+    default_n_lists,
+)
+from repro.ivf.search import (
+    list_candidates,
+    record_routes,
+    scan_search,
+    top_lists,
+)
+
+__all__ = [
+    "IVFPartition",
+    "build_partition",
+    "default_n_lists",
+    "list_candidates",
+    "record_routes",
+    "scan_search",
+    "top_lists",
+]

@@ -1,0 +1,337 @@
+"""IVF-over-BQ: k-means-free coarse partition in signature space.
+
+The partition layer of DESIGN.md §13: split the corpus into L ≈ √N
+inverted lists whose centroids are *real node signatures* chosen by
+BQ medoid sampling — no k-means, no float training pass, keeping the
+paper's training-free claim intact end to end:
+
+1. a seeded permutation yields L *seed signatures* — one uniform draw
+   per random shard, so seed density follows data density (a mean- or
+   medoid-of-shard seed would clump at the corpus centroid: a random
+   shard's mean IS the global mean, up to 1/√|shard| noise);
+2. a few rounds of *majority-vote refinement* over a node subsample:
+   each round assigns the subsample to the current centroids with the
+   batched list-scan kernel (``kernels.dispatch.list_scan_ops``),
+   then recomputes every list's majority signature — the re-encoded
+   mean of its sampled members' decoded ±1/±2 levels, a closed-form
+   bitwise majority with no learned parameters, the same construction
+   ``core.vamana`` uses for the global entry medoid.  Refinement only
+   shapes the centroids, so it runs on ~32·L nodes instead of all N
+   (majorities are stable from a few dozen members per list); routing
+   quality plateaus after 2-3 rounds and measured on the green
+   surrogate corpora it matches a float k-means partition's list
+   coverage, i.e. the signature-space partition is at the IVF ceiling
+   for the data;
+3. one full assignment scan maps every node to its nearest refined
+   majority signature — the only O(N·L) pass in the build, which is
+   what keeps IVF-assisted construction near-linear;
+4. the final layout is contiguous: ``member_ids`` is one (N,)
+   permutation, ``offsets`` its (L+1,) prefix — the canonical
+   persisted layout — and ``list_ids`` the (L, cap) padded device
+   view the fused search programs gather from.  ``cent_words`` keeps
+   the majority signatures (they route better than any single member
+   can); ``cent_ids`` snaps each list to its nearest *real member*
+   via ``linking.shard_medoids`` — the list's medoid, used as entry
+   seed and provenance.
+
+Everything downstream (construction seeding, the ``nav="ivf"`` plan
+route, targeted scatter) consumes this one object.  Determinism: the
+partition is a pure function of (signatures, n_lists, seed, sample).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bq, linking
+from repro.core.metric import MetricArrays, make_backend
+from repro.kernels import dispatch
+
+_PREFIX = "ivf_"
+_ASSIGN_CHUNK = 8192
+# refinement subsample: ~this many members per list feed each round's
+# majority vote (the final assignment always scans every node)
+_REFINE_PER_LIST = 32
+# capacity-bounded assignment keeps this many ranked list choices per
+# node before falling back to the globally emptiest list
+_BALANCE_PREFS = 8
+
+
+def default_n_lists(n: int) -> int:
+    """≈√N lists (each list ≈ √N members), clamped for tiny corpora."""
+    return max(2, min(n, round(math.sqrt(max(n, 1)))))
+
+
+@dataclasses.dataclass
+class IVFPartition:
+    """The coarse list structure (hot: ``cent_words`` + ``list_ids``).
+
+    ``member_ids``/``offsets`` are the canonical contiguous layout
+    (list l's members are ``member_ids[offsets[l]:offsets[l+1]]``);
+    ``list_ids`` is the derived (L, cap) -1-padded device view that the
+    fused programs gather with a single ``list_ids[top_p]`` — cap is
+    the max list population rounded up to a lane-friendly multiple.
+    """
+
+    cent_words: jnp.ndarray          # (L, 2W) uint32 — device-hot
+    list_ids: jnp.ndarray            # (L, cap) int32, -1 padded — device-hot
+    cent_ids: np.ndarray             # (L,) int32 medoid node ids
+    assign: np.ndarray               # (N,) int32 list id per node
+    offsets: np.ndarray              # (L+1,) int64 contiguous-layout prefix
+    member_ids: np.ndarray           # (N,) int32 contiguous layout
+    dim: int
+    seed: int = 0
+
+    @property
+    def n_lists(self) -> int:
+        return int(self.cent_words.shape[0])
+
+    @property
+    def cap(self) -> int:
+        return int(self.list_ids.shape[1])
+
+    @property
+    def default_probes(self) -> int:
+        """Serve-time top-p default: ≈L/3 probed lists.
+
+        Flat coarse routing trades scan fraction for recall — on
+        corpora without strong coarse cluster structure (the green
+        surrogates), list coverage of the true top-k grows roughly
+        linearly in p, so the serve default probes a third of the
+        lists and leaves escalation (plan ``escalate_mult``) room to
+        widen toward the exact-bq2 ceiling at p = L.
+        """
+        return min(self.n_lists, max(2, -(-self.n_lists // 3)))
+
+    @property
+    def build_probes(self) -> int:
+        """Construction-time top-p default: ≈4√L probed lists.
+
+        Build candidate pools only need *approximate* locality — the
+        alpha-prune keeps diverse survivors and the random long-edge
+        mix-in restores reachability — so construction probes
+        O(√L) = O(N^(1/4)) lists, a vanishing fraction of L as the
+        corpus grows; with the capacity-bounded cap (≈1.5·N/L) the
+        per-node pool is O(N^(3/4)) candidates instead of the O(N)
+        a whole-graph beam search touches, which is where the
+        sub-quadratic build time comes from.  The 4× multiplier is
+        empirical: it buys graph quality within a point of the
+        beam-seeded build while staying well under its cost.
+        """
+        return min(self.n_lists,
+                   max(2, round(4 * math.sqrt(self.n_lists))))
+
+    def memory_bytes(self) -> int:
+        """Hot bytes of the IVF tier (centroid signatures + list
+        layout) — what ``memory_breakdown`` reports."""
+        return int(
+            self.cent_words.size * 4
+            + self.list_ids.size * 4
+            + self.offsets.size * 8
+        )
+
+    # -- persistence (merged into index npz archives) ----------------------
+
+    def to_npz_fields(self, prefix: str = _PREFIX) -> dict:
+        return {
+            prefix + "cent_words": np.asarray(self.cent_words),
+            prefix + "cent_ids": self.cent_ids,
+            prefix + "assign": self.assign,
+            prefix + "offsets": self.offsets,
+            prefix + "member_ids": self.member_ids,
+            prefix + "dim": np.int64(self.dim),
+            prefix + "seed": np.int64(self.seed),
+            prefix + "cap": np.int64(self.cap),
+        }
+
+    @classmethod
+    def from_npz(cls, z, prefix: str = _PREFIX):
+        """Rebuild from an index archive; None when it carries none."""
+        if prefix + "cent_words" not in z:
+            return None
+        assign = z[prefix + "assign"].astype(np.int32)
+        offsets = z[prefix + "offsets"].astype(np.int64)
+        member_ids = z[prefix + "member_ids"].astype(np.int32)
+        return cls(
+            cent_words=jnp.asarray(z[prefix + "cent_words"]),
+            list_ids=jnp.asarray(_layout_to_list_ids(
+                member_ids, offsets, int(z[prefix + "cap"][()])
+            )),
+            cent_ids=z[prefix + "cent_ids"].astype(np.int32),
+            assign=assign,
+            offsets=offsets,
+            member_ids=member_ids,
+            dim=int(z[prefix + "dim"][()]),
+            seed=int(z[prefix + "seed"][()]),
+        )
+
+
+def _layout_to_list_ids(member_ids, offsets, cap) -> np.ndarray:
+    """Contiguous layout -> (L, cap) padded gather view."""
+    n_lists = offsets.shape[0] - 1
+    out = np.full((n_lists, cap), -1, dtype=np.int32)
+    counts = np.diff(offsets)
+    rank = np.arange(member_ids.shape[0]) - np.repeat(offsets[:-1], counts)
+    rows = np.repeat(np.arange(n_lists), counts)
+    out[rows, rank] = member_ids
+    return out
+
+
+def build_partition(
+    sigs: bq.Signature,
+    *,
+    n_lists: int | None = None,
+    seed: int = 0,
+    sample: int = 256,
+    refine: int = 3,
+    balance: float | None = 1.5,
+    route: str | None = None,
+) -> IVFPartition:
+    """Partition ``sigs`` into L inverted lists (see module docstring).
+
+    ``sample`` bounds how many list members feed each majority
+    signature (decode cost is O(L·sample·D) per round; medoid
+    selection and the final assignment always see every member);
+    ``refine`` is the number of majority-vote rounds, each run on a
+    subsample so the only O(N·L) pass is the final assignment scan.
+    ``balance`` caps every list at ``ceil(balance · N/L)`` members in
+    the final assignment (None disables): nodes claim their nearest
+    list in confidence order (sim margin between 1st and 2nd choice,
+    descending) and spill to their next choice once a list is full.
+    Everything downstream pays O(p · cap) per probe, so the padded cap
+    — not the mean list size — is the real scan cost; capacity-bounded
+    assignment keeps cap within ~``balance``× of the mean instead of
+    letting one dense cluster set it.  Deterministic under fixed
+    ``seed``.
+    """
+    n = sigs.words.shape[0]
+    n_lists = n_lists or default_n_lists(n)
+    n_lists = max(2, min(n_lists, n))
+    backend = make_backend("bq2", MetricArrays(sigs=sigs), route=route)
+    ops = dispatch.list_scan_ops(sigs.dim, route=route)
+
+    def assign_to(words, cent_words) -> np.ndarray:
+        m = words.shape[0]
+        out = np.empty((m,), dtype=np.int32)
+        for s in range(0, m, _ASSIGN_CHUNK):
+            block = words[s:s + _ASSIGN_CHUNK]
+            sim = ops.scan(block, cent_words)
+            out[s:s + block.shape[0]] = np.asarray(
+                jnp.argmax(sim, axis=-1)
+            )
+        return out
+
+    def assign_capped(words, cent_words, frac: float) -> np.ndarray:
+        """Greedy capacity-bounded assignment (see ``balance``)."""
+        m = words.shape[0]
+        k = min(_BALANCE_PREFS, n_lists)
+        pref = np.empty((m, k), dtype=np.int32)
+        psim = np.empty((m, k), dtype=np.float32)
+        for s in range(0, m, _ASSIGN_CHUNK):
+            block = words[s:s + _ASSIGN_CHUNK]
+            # host-side top-k: the sim block is tiny (rows x L) and
+            # np.argpartition beats compiling a device top_k for it
+            sim = np.asarray(ops.scan(block, cent_words))
+            part_k = np.argpartition(-sim, k - 1, axis=-1)[:, :k]
+            vals = np.take_along_axis(sim, part_k, axis=-1)
+            order_k = np.argsort(-vals, axis=-1, kind="stable")
+            pref[s:s + block.shape[0]] = np.take_along_axis(
+                part_k, order_k, axis=-1
+            )
+            psim[s:s + block.shape[0]] = np.take_along_axis(
+                vals, order_k, axis=-1
+            )
+        margin = psim[:, 0] - (psim[:, 1] if k > 1 else 0.0)
+        order = np.argsort(-margin, kind="stable")
+        cap_limit = max(8, -(-int(m * frac) // n_lists))
+        counts = np.zeros((n_lists,), dtype=np.int64)
+        out = np.empty((m,), dtype=np.int32)
+        for i in order:
+            for li in pref[i]:
+                if counts[li] < cap_limit:
+                    out[i] = li
+                    counts[li] += 1
+                    break
+            else:
+                # all k preferred lists full: take the emptiest
+                li = int(np.argmin(counts))
+                out[i] = li
+                counts[li] += 1
+        return out
+
+    def layout(assign):
+        member_ids = np.argsort(assign, kind="stable").astype(np.int32)
+        counts = np.bincount(assign, minlength=n_lists)
+        offsets = np.zeros((n_lists + 1,), dtype=np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        cap = max(8, int(-(-int(counts.max()) // 8) * 8))
+        return member_ids, counts, offsets, cap
+
+    # 1. density-following seeds: one uniform draw per random shard
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n).astype(np.int32)
+    per = -(-n // n_lists)                         # ceil division
+    padded = (np.concatenate([perm, perm[:per * n_lists - n]])
+              if per * n_lists - n else perm)
+    seed_ids = padded.reshape(n_lists, per)[:, 0].copy()
+
+    # 2. majority-vote refinement on a subsample: each round assigns
+    # the subsample to the current centroids, then every non-empty
+    # list's routing centroid becomes the re-encoded mean of its
+    # sampled members' decoded levels — a closed-form bitwise majority
+    cent_words = sigs.words[jnp.asarray(seed_ids)]
+    r_n = min(n, max(_REFINE_PER_LIST * n_lists, 2048))
+    sub_ids = np.sort(perm[:r_n])
+    sub_words = sigs.words[jnp.asarray(sub_ids)]
+    for _ in range(max(refine, 0)):
+        assign_s = assign_to(sub_words, cent_words)
+        member_s, counts_s, offsets_s, cap_s = layout(assign_s)
+        grid = jnp.asarray(_layout_to_list_ids(
+            member_s, offsets_s, cap_s
+        ))[:, : min(cap_s, max(8, sample))]
+        levels = bq.decode_levels(
+            bq.Signature(words=sub_words[jnp.maximum(grid, 0)],
+                         dim=sigs.dim)
+        )                                          # (L, S', D)
+        ok = (grid >= 0)[..., None]
+        mean = (
+            jnp.where(ok, levels, 0.0).sum(axis=1)
+            / jnp.maximum(ok.sum(axis=1), 1)
+        )
+        majority = backend.encode_queries(mean)
+        # empty lists keep their previous signature (stay recoverable)
+        cent_words = jnp.where(
+            (counts_s > 0)[:, None], majority, cent_words
+        )
+
+    # 3. the single full assignment scan + contiguous layout; the
+    # capacity bound keeps cap (the per-probe scan cost) near the mean
+    if balance is not None:
+        assign = assign_capped(sigs.words, cent_words, balance)
+    else:
+        assign = assign_to(sigs.words, cent_words)
+    member_ids, counts, offsets, cap = layout(assign)
+    prov = jnp.asarray(_layout_to_list_ids(member_ids, offsets, cap))
+
+    # 4. snap each list to its nearest real member for provenance /
+    # entry seeding; routing keeps the majority signatures
+    medoids = np.asarray(
+        linking.shard_medoids(backend, cent_words, prov)
+    ).astype(np.int32)
+    cent_ids = np.where(counts > 0, medoids, seed_ids).astype(np.int32)
+    list_ids = np.asarray(prov)
+
+    return IVFPartition(
+        cent_words=cent_words,
+        list_ids=jnp.asarray(list_ids),
+        cent_ids=cent_ids,
+        assign=assign,
+        offsets=offsets,
+        member_ids=member_ids,
+        dim=sigs.dim,
+        seed=seed,
+    )

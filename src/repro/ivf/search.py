@@ -1,0 +1,117 @@
+"""IVF list-scan search primitives (DESIGN.md §13).
+
+The jit-composable building blocks of the ``nav="ivf"`` family: scan
+the centroid signatures with the batched list-scan kernel, keep the
+top-p lists, gather their (disjoint) members from the padded
+``list_ids`` view, score them with the registered metric backend, and
+keep the best ef — the flat two-stage alternative to graph traversal,
+racing it on the same plan/rerank/margin machinery.
+
+These are free functions over traced arrays (``cent_words`` /
+``list_ids`` enter as program arguments, exactly like ``adjacency``
+does on the graph route) so ``plan.cache`` fuses them into one compiled
+program per plan and the construction seeder (``core.vamana``) reuses
+``top_lists``/``list_candidates`` inside its own jitted chunk op.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(3.0e38)
+
+# shards-contacted histogram boundaries: powers of two up to fleet
+# sizes far beyond anything the host-driven scatter will see
+_SCATTER_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def record_routes(top, shards_contacted=None, *, registry=None):
+    """Record per-list routing counters (DESIGN.md §13 observability).
+
+    ``top`` is the (Q, p) probed-list array of one batch;
+    ``shards_contacted`` (optional, (Q,)) is how many shards each
+    query's targeted scatter touched.  Feeds
+    ``quiver_ivf_list_routes_total{list}`` and the
+    ``quiver_ivf_scatter_shards`` histogram on ``registry`` (default
+    process registry), making skewed list popularity and fan-out width
+    visible on the fleet scrape.
+    """
+    from repro.obs.metrics import get_default_registry
+
+    reg = registry if registry is not None else get_default_registry()
+    routes = reg.counter(
+        "quiver_ivf_list_routes_total",
+        "IVF probes routed to this coarse list",
+        labels=("list",),
+    )
+    counts = np.bincount(np.asarray(top).ravel())
+    for lst in np.nonzero(counts)[0]:
+        routes.inc(int(counts[lst]), list=int(lst))
+    if shards_contacted is not None:
+        reg.histogram(
+            "quiver_ivf_scatter_shards",
+            "shards contacted per query by targeted scatter",
+            buckets=_SCATTER_BUCKETS,
+        ).observe_many(np.asarray(shards_contacted))
+
+
+def top_lists(scan, reprs, cent_words, p: int) -> jnp.ndarray:
+    """(Q, 2W) query signatures -> (Q, p) nearest-list ids.
+
+    ``scan`` is a bound ``ListScanOps.scan`` (kernel-dispatched); the
+    similarity is int32 Table-1, larger = nearer.
+    """
+    sim = scan(reprs, cent_words)
+    _, top = jax.lax.top_k(sim, p)
+    return top
+
+
+def list_candidates(backend, reprs, list_ids, top):
+    """Gather + score the members of each query's top-p lists.
+
+    Returns ((Q, p*cap) member ids with -1 padding, (Q, p*cap) float32
+    distances, INF on padding).  Lists partition the corpus, so the
+    gathered members are disjoint across a query's p lists — no dedup
+    stage is needed before top-k.
+    """
+    q = top.shape[0]
+    mem = list_ids[top].reshape(q, -1)
+    valid = mem >= 0
+    d = backend.dist_many(reprs, jnp.maximum(mem, 0), valid)
+    d = jnp.where(valid, d, INF)
+    return mem, d
+
+
+def scan_search(
+    backend,
+    scan,
+    reprs,
+    cent_words,
+    list_ids,
+    *,
+    probes: int,
+    ef: int,
+    result_valid=None,
+):
+    """Full IVF candidate stage: (Q, 2W) reprs -> ((Q, ef') ids, dists).
+
+    ``ef'`` = min(ef, probes*cap) — a plan cannot ask for more
+    candidates than its probed lists hold; short pools surface as -1
+    ids / INF dists, which downstream rerank and ``beam_margin``
+    already treat as starvation (margin -1 -> escalation widens p).
+    ``result_valid`` (optional (N,) bool) is the filtered route's
+    predicate mask: non-matching members never surface, mirroring the
+    beam's result mask semantics.
+    """
+    top = top_lists(scan, reprs, cent_words, probes)
+    mem, d = list_candidates(backend, reprs, list_ids, top)
+    if result_valid is not None:
+        d = jnp.where(result_valid[jnp.maximum(mem, 0)], d, INF)
+    ef_eff = min(ef, mem.shape[1])
+    neg, pos = jax.lax.top_k(-d, ef_eff)
+    ids = jnp.take_along_axis(mem, pos, axis=-1)
+    dists = -neg
+    ids = jnp.where(dists < INF / 2, ids, -1)
+    return ids, dists

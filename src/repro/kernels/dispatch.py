@@ -46,6 +46,13 @@ class MetricOps(NamedTuple):
     route: str           # "pallas" | "ref" (introspection / tests)
 
 
+class ListScanOps(NamedTuple):
+    """IVF coarse-routing primitive bound to one route (DESIGN.md §13)."""
+
+    scan: Callable       # (Q, 2W) x (L, 2W) -> (Q, L) int32 sim
+    route: str           # "pallas" | "ref"
+
+
 def resolve_route(route: str | None = None) -> str:
     """Pick the kernel route once; ``QUIVER_DISPATCH`` overrides auto.
 
@@ -146,6 +153,45 @@ def bq2_ops(dim: int, route: str | None = None) -> MetricOps:
         pairwise=pairwise,
         route=route,
     )
+
+
+# ---------------------------------------------------------------------------
+# IVF centroid list scan — batched top-p coarse routing (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def list_scan_ops(dim: int, route: str | None = None) -> ListScanOps:
+    """Bind the batched centroid-scan primitive for ``dim``.
+
+    The scan scores a query block against *every* list centroid
+    signature at once — (Q, 2W) x (L, 2W) -> (Q, L) int32 Table-1
+    similarity — so a ``lax.top_k`` over the result is the top-p list
+    routing decision of the IVF layer.  Same ``QUIVER_DISPATCH``
+    switch as the metric ops: compiled Mosaic kernel on TPU
+    (centroids VMEM-resident across the whole grid,
+    ``repro.kernels.list_scan``), jnp reference elsewhere.
+    """
+    from repro.kernels.list_scan import list_scan_pallas
+
+    route = resolve_route(route)
+    mask = bq.valid_mask(dim)
+    w = bq.n_words(dim)
+
+    if route == "ref":
+        return ListScanOps(
+            scan=lambda q, cents: _bq2_sim_ref(q, cents, mask, w),
+            route=route,
+        )
+
+    block_q, block_l = 8, 128
+
+    def scan(q_words, cent_words):
+        qp = _pad_to(q_words, 0, block_q)
+        cp = _pad_to(cent_words, 0, block_l)
+        sim = list_scan_pallas(qp, cp, mask, dim=dim, block_q=block_q)
+        return sim[: q_words.shape[0], : cent_words.shape[0]]
+
+    return ListScanOps(scan=scan, route=route)
 
 
 # ---------------------------------------------------------------------------

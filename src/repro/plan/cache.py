@@ -85,12 +85,20 @@ class PlanCache:
             self._programs[plan] = self._build(plan)
         return self._programs[plan]
 
+    def _nav_backend(self, nav: str):
+        """The metric backend a plan's nav family scores with — the
+        ivf family navigates coarse lists but scores candidates in
+        plain bq2 space (the partition lives there)."""
+        return self._index.backend("bq2" if nav == "ivf" else nav)
+
     def _build(self, plan: QueryPlan):
-        if plan.route != "graph":
-            raise ValueError("only graph plans compile; brute plans "
-                             "run through filter.brute_force_topk")
+        if plan.route == "brute":
+            raise ValueError("brute plans run through "
+                             "filter.brute_force_topk, not a program")
+        if plan.route == "ivf":
+            return self._build_ivf(plan)
         index = self._index
-        backend = index.backend(plan.nav)
+        backend = self._nav_backend(plan.nav)
         dist_fn = backend.dist_fn
         neutral = backend.neutral_dist
         n = index.sigs.words.shape[0]
@@ -123,13 +131,62 @@ class PlanCache:
             program, name=self._tag + plan.signature()
         )
 
+    def _build_ivf(self, plan: QueryPlan):
+        """One fused ivf program: list scan -> top-p gather -> metric
+        top-ef -> rerank -> margin.  ``cent_words``/``list_ids`` enter
+        as program arguments (like ``adjacency`` on the graph route) so
+        the executable never bakes index arrays in as constants."""
+        index = self._index
+        part = index.ivf
+        if part is None:
+            raise ValueError("ivf plan on an index without a partition")
+        backend = self._nav_backend(plan.nav)
+        neutral = backend.neutral_dist
+        from repro.core.index import rerank
+        from repro.ivf.search import scan_search
+        from repro.kernels import dispatch
+
+        scan = dispatch.list_scan_ops(
+            index.sigs.dim, route=getattr(backend, "route", None)
+        ).scan
+        # clamp to the partition, but never below the fan-in that can
+        # fill k (degraded plans halve probes with floor 1)
+        p_eff = max(min(plan.probes, part.n_lists),
+                    min(part.n_lists, -(-plan.k // part.cap)))
+
+        if plan.filtered:
+            def program(reprs, queries, cent_words, list_ids, vectors,
+                        result_valid):
+                ids, dists = scan_search(
+                    backend, scan, reprs, cent_words, list_ids,
+                    probes=p_eff, ef=plan.ef, result_valid=result_valid,
+                )
+                out_ids, scores = rerank(ids, dists, queries, vectors,
+                                         plan.k)
+                margins = beam_margin(dists, plan.k, neutral)
+                return out_ids, scores, margins
+        else:
+            def program(reprs, queries, cent_words, list_ids, vectors):
+                ids, dists = scan_search(
+                    backend, scan, reprs, cent_words, list_ids,
+                    probes=p_eff, ef=plan.ef,
+                )
+                out_ids, scores = rerank(ids, dists, queries, vectors,
+                                         plan.k)
+                margins = beam_margin(dists, plan.k, neutral)
+                return out_ids, scores, margins
+
+        return trace.counting_jit(
+            program, name=self._tag + plan.signature()
+        )
+
     # -- query encoding ----------------------------------------------------
 
     def encode(self, plan: QueryPlan, queries: jnp.ndarray) -> jnp.ndarray:
         """Normalized float32 queries -> the plan's beam representation
         (rotation applied for signature-space navigation)."""
         index = self._index
-        backend = index.backend(plan.nav)
+        backend = self._nav_backend(plan.nav)
         enc_in = queries
         if index.rotation is not None and backend.kind != "float32":
             enc_in = queries @ index.rotation
@@ -178,8 +235,12 @@ class PlanCache:
                 else:
                     self.misses += 1
             self._seen.add((plan, bucket))
-            args = (pad_rows(rep, bucket), pad_rows(q, bucket),
-                    index.adjacency, vectors, start)
+            if plan.route == "ivf":
+                args = (pad_rows(rep, bucket), pad_rows(q, bucket),
+                        index.ivf.cent_words, index.ivf.list_ids, vectors)
+            else:
+                args = (pad_rows(rep, bucket), pad_rows(q, bucket),
+                        index.adjacency, vectors, start)
             if plan.filtered:
                 args += (ctx.result_valid,)
             ids, scores, margins = prog(*args)
@@ -262,7 +323,7 @@ class PlanCache:
             return brute_force_topk(
                 queries, ctx.match_ids, plan.k, vectors=index.vectors
             )
-        backend = index.backend(plan.nav)
+        backend = self._nav_backend(plan.nav)
         return brute_force_topk(
             queries, ctx.match_ids, plan.k, vectors=None,
             backend=backend, reprs=self.encode(plan, queries),

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 
-ROUTES = ("graph", "brute")
+ROUTES = ("graph", "brute", "ivf")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,12 +47,13 @@ class QueryPlan:
     ef: int
     expand: int = 1
     rerank: bool = True
-    route: str = "graph"            # "graph" | "brute"
+    route: str = "graph"            # "graph" | "brute" | "ivf"
     filtered: bool = False          # result_valid mask on the beam
     adaptive: bool = False          # tight-margin second stage enabled
     escalate_margin: float = 0.15
     escalate_mult: int = 4
     query_batch: int = 256          # chunk ceiling of the bucket ladder
+    probes: int = 0                 # ivf route: top-p lists scanned
 
     def __post_init__(self):
         if self.route not in ROUTES:
@@ -66,16 +67,31 @@ class QueryPlan:
                 raise ValueError(
                     f"expand must be in [1, ef], got {self.expand}"
                 )
+        if self.route == "ivf":
+            if self.ef < self.k:
+                raise ValueError(
+                    f"ivf plan needs ef >= k, got ef={self.ef} k={self.k}"
+                )
+            if self.probes < 1:
+                raise ValueError(
+                    f"ivf plan needs probes >= 1, got {self.probes}"
+                )
         if self.k < 1 or self.query_batch < 1 or self.escalate_mult < 1:
             raise ValueError("k / query_batch / escalate_mult must be >= 1")
 
     # -- derived stages ----------------------------------------------------
 
     def escalated(self) -> "QueryPlan":
-        """Stage 2 of an adaptive plan: same program shape, wider beam,
-        no further escalation."""
+        """Stage 2 of an adaptive plan: same program shape, wider pool,
+        no further escalation.  The ivf route widens its list fan-in
+        (``probes``) along with ef — starved pools escalate by scanning
+        more lists, not just keeping more of the same candidates."""
+        probes = self.probes
+        if self.route == "ivf":
+            probes = self.probes * self.escalate_mult
         return dataclasses.replace(
-            self, ef=self.ef * self.escalate_mult, adaptive=False
+            self, ef=self.ef * self.escalate_mult, probes=probes,
+            adaptive=False,
         )
 
     @property
@@ -85,6 +101,8 @@ class QueryPlan:
     def can_degrade(self) -> bool:
         """Brute plans are already exact (ef plays no role) and plans at
         the ef floor have nothing left to give."""
+        if self.route == "ivf":
+            return self.ef // 2 >= self.min_ef or self.probes > 1
         return self.route == "graph" and self.ef // 2 >= self.min_ef
 
     def degraded(self) -> "QueryPlan":
@@ -92,17 +110,24 @@ class QueryPlan:
         ``max(k, expand)``) and drop escalation — under deadline
         pressure the adaptive second stage is the first thing to go.
         Halving keeps the degraded plans inside a closed set (no fresh
-        compilations under load spikes)."""
+        compilations under load spikes).  The ivf route halves its
+        probed lists in step (floor 1)."""
         if not self.can_degrade():
             return self
+        probes = self.probes
+        if self.route == "ivf":
+            probes = max(1, self.probes // 2)
         return dataclasses.replace(
-            self, ef=max(self.min_ef, self.ef // 2), adaptive=False
+            self, ef=max(self.min_ef, self.ef // 2), probes=probes,
+            adaptive=False,
         )
 
     def signature(self) -> str:
         """Short stable id for logs and trace-counter names."""
         bits = [self.nav, f"k{self.k}", f"ef{self.ef}", f"L{self.expand}",
                 self.route]
+        if self.route == "ivf":
+            bits.append(f"p{self.probes}")
         if self.filtered:
             bits.append("masked")
         if self.rerank:

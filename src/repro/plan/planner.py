@@ -74,18 +74,40 @@ def resolve_plan(
     filter=None,
     selectivity_floor: float = DEFAULT_SELECTIVITY_FLOOR,
     adaptive: bool | None = None,
+    probes: int | None = None,
 ) -> tuple[QueryPlan, PlanContext]:
     """Resolve one search call to (plan, context) for ``index``.
 
     ``index`` is any immutable-index-shaped object: ``sigs``,
     ``medoid``, ``vectors``, ``labels``, ``policy``, ``metric_kind``.
-    Same (policy, filter selectivity band, ef, k, nav, expand) in →
-    equal (hash-identical) plan out: the PlanCache key.
+    Same (policy, filter selectivity band, ef, k, nav, expand, probes)
+    in → equal (hash-identical) plan out: the PlanCache key.
+
+    ``kind`` defaults through the index's :class:`NavPolicy` before its
+    build metric: the policy may prescribe a navigation *family* the
+    graph was not built in (``nav="ivf"`` navigates coarse lists over a
+    bq2-built index).  ``probes`` is the ivf route's list fan-in
+    (default: the partition's √L).
     """
     n = index.sigs.words.shape[0]
-    ef, adaptive, sched = resolve_schedule(index.policy, nav, ef, adaptive)
-    kind = nav or index.metric_kind
+    policy = getattr(index, "policy", None)
+    ef, adaptive, sched = resolve_schedule(policy, nav, ef, adaptive)
+    kind = nav or (policy.nav if policy is not None else index.metric_kind)
     do_rerank = rerank and index.vectors is not None
+
+    part = None
+    if kind == "ivf":
+        part = getattr(index, "ivf", None)
+        if part is None:
+            raise ValueError(
+                "nav='ivf' needs a coarse partition: build with "
+                "BuildParams(ivf_candidates=True) or call build_ivf()"
+            )
+        probes = probes or part.default_probes
+        # enough lists to fill k even if every probed list is sparse
+        probes = max(min(probes, part.n_lists),
+                     min(part.n_lists, -(-k // part.cap)))
+        expand = 1                  # no traversal: expansion is meaningless
 
     ctx = PlanContext(start=int(index.medoid))
     filtered = False
@@ -120,15 +142,22 @@ def resolve_plan(
         ctx.result_valid = mask
         ctx.selectivity = sel
         ef_run = widened_ef(ef, sel, selectivity_floor, n)
+        if part is not None and ef_run > ef:
+            # the ivf route widens its list fan-in by the same
+            # quantized multiple the graph route widens its beam: the
+            # predicate thins every probed list uniformly in expectation
+            probes = min(part.n_lists, -(-(probes * ef_run) // ef))
         lbl = entry_label(expr, count_fn)
         if lbl is not None and index.labels.entries[lbl] >= 0:
             ctx.start = int(index.labels.entries[lbl])
 
     plan = QueryPlan(
         nav=kind, k=k, ef=ef_run, expand=expand, rerank=do_rerank,
-        route="graph", filtered=filtered, adaptive=adaptive,
+        route="ivf" if kind == "ivf" else "graph",
+        filtered=filtered, adaptive=adaptive,
         escalate_margin=sched.escalate_margin,
         escalate_mult=sched.escalate_mult, query_batch=query_batch,
+        probes=probes if kind == "ivf" else 0,
     )
     _note_resolution(plan, ctx.selectivity)
     return plan, ctx

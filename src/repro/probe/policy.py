@@ -32,8 +32,11 @@ import numpy as np
 
 from repro.probe.report import CompatibilityReport
 
-# the auto-selection ladder, most to least compressed
-NAV_LADDER = ("bq2", "adc", "float32")
+# the auto-selection ladder, most to least compressed.  "ivf" is the
+# coarse-list sibling of the bq2 rung (DESIGN.md §13): same signature
+# space and fidelity, flat top-p list scan instead of graph traversal —
+# eligible only when the index carries a partition (``have_ivf``).
+NAV_LADDER = ("bq2", "ivf", "adc", "float32")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,13 +120,22 @@ def resolve_schedule(
 
 
 def select_policy(
-    report: CompatibilityReport, *, have_vectors: bool = True
+    report: CompatibilityReport, *, have_vectors: bool = True,
+    have_ivf: bool = False,
 ) -> NavPolicy:
     """Map a probe verdict to a rung of the ladder + schedule.
 
     ``have_vectors=False`` (vector-free index) removes the float32 rung:
     red-zone data then routes to ``adc`` with the widest schedule — the
     honest best-effort, still far better than collapsed ``bq2``.
+
+    ``have_ivf=True`` (the index carries a coarse partition, i.e. it was
+    built with ``ivf_candidates``) makes the ``ivf`` family the green
+    default: on green corpora the flat top-p list scan matches graph
+    recall at the same signature fidelity with no traversal, and
+    escalation widens ``probes`` instead of ef.  Amber/red verdicts
+    never select ivf — a quantization-stressed corpus needs the graph's
+    adaptive widening or an off-BQ rung, not a coarser candidate stage.
     """
     verdict = report.verdict
     # corpus-calibrated escalation threshold: serve-time queries whose
@@ -133,6 +145,8 @@ def select_policy(
     if not (margin == margin):            # NaN: signature-only probe
         margin = NavPolicy(nav="bq2").escalate_margin
     if verdict == "green":
+        if have_ivf:
+            return NavPolicy(nav="ivf", source="probe")
         return NavPolicy(nav="bq2", source="probe")
     if verdict == "amber":
         return NavPolicy(

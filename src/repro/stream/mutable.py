@@ -739,6 +739,13 @@ class MutableQuIVerIndex:
         if self.n_live == 0:
             return (np.full((nq, k), -1, np.int32),
                     np.full((nq, k), -np.inf, np.float32))
+        if nav == "ivf":
+            raise ValueError(
+                "nav='ivf' serves from a frozen coarse partition, which "
+                "would go stale under churn — freeze() this index first "
+                "(with BuildParams(ivf_candidates=True) the frozen "
+                "snapshot carries a fresh partition)"
+            )
         ef, adaptive, sched = resolve_schedule(self.policy, nav, ef,
                                                adaptive)
         kind = nav or self.metric_kind
@@ -823,6 +830,12 @@ class MutableQuIVerIndex:
         dropped (they are already absent after :meth:`consolidate`).
         With zero churn this is exactly the arrays the index was built
         with, so searches are bit-identical to the source index.
+
+        When the index was configured with
+        ``BuildParams(ivf_candidates=True)`` the snapshot also carries
+        a freshly built coarse partition over the compacted live set,
+        so ``nav="ivf"`` works on the frozen index (it is rejected on
+        the mutable one — the partition would go stale under churn).
         """
         if self.n_live == 0:
             raise ValueError("cannot freeze an empty index")
@@ -843,8 +856,13 @@ class MutableQuIVerIndex:
                 self.words, self.vectors, self._live_dev(),
                 kind=self.metric_kind, dim=self.dim, chunk=4096,
             ))
+        sigs = bq.Signature(words=words, dim=self.dim)
+        ivf = None
+        if getattr(self.params, "ivf_candidates", False):
+            from repro.ivf import build_partition
+            ivf = build_partition(sigs, seed=self.params.seed)
         return QuIVerIndex(
-            sigs=bq.Signature(words=words, dim=self.dim),
+            sigs=sigs,
             adjacency=jnp.asarray(adj_new),
             medoid=int(remap[medoid]),
             params=self.params,
@@ -857,6 +875,7 @@ class MutableQuIVerIndex:
             ),
             policy=self.policy,
             report=self.report,
+            ivf=ivf,
         )
 
     # -- persistence -------------------------------------------------------

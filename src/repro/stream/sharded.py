@@ -49,6 +49,10 @@ class StreamingShardedIndex:
         self._rr = 0                      # round-robin insert cursor
         self._snapshot: ShardedIndex | None = None
         self._snapshot_gens: tuple[int, ...] | None = None
+        # IVF routing tier (enable_ivf_routing): (cent_words, owners,
+        # default_probes, generations it was built at)
+        self._ivf_route = None
+        self._ivf_route_seed = 0
 
     @classmethod
     def empty(
@@ -192,6 +196,99 @@ class StreamingShardedIndex:
             raise ValueError("cannot probe an empty fleet")
         return merge_reports(reports)
 
+    # -- IVF routing tier (DESIGN.md §13) ----------------------------------
+
+    def enable_ivf_routing(self, *, n_lists: int | None = None,
+                           seed: int = 0) -> int:
+        """Build the coarse routing tier over the fleet's live set.
+
+        Streaming placement is round-robin (lists cannot be the shard
+        unit under churn), so the tier is an *ownership overlay*: one
+        global partition over the live signatures plus a (S, L) matrix
+        of which shards hold members of each list.  ``search(...,
+        scatter=True)`` then contacts only the shards owning a query's
+        top-p lists.  The tier is rebuilt lazily whenever any shard's
+        generation counter moves.  Returns the number of lists.
+        """
+        from repro.core import bq
+        from repro.ivf import build_partition
+
+        self._ivf_route_seed = seed
+        live_words, shard_of = [], []
+        for i, s in enumerate(self.shards):
+            rows = np.nonzero(s.live)[0]
+            if rows.size:
+                live_words.append(np.asarray(s.words)[rows])
+                shard_of.append(np.full(rows.size, i, np.int32))
+        if not live_words:
+            raise ValueError("cannot route an empty fleet")
+        sigs = bq.Signature(
+            words=jnp.asarray(np.concatenate(live_words)), dim=self.dim
+        )
+        part = build_partition(sigs, n_lists=n_lists, seed=seed)
+        shard_of = np.concatenate(shard_of)
+        owners = np.zeros((self.n_shards, part.n_lists), dtype=bool)
+        owners[shard_of, part.assign] = True
+        self._ivf_route = (
+            part.cent_words, owners, part.default_probes,
+            tuple(s.generation for s in self.shards),
+        )
+        return part.n_lists
+
+    def _scatter_search(self, queries, *, ef, k, probes, filter,
+                        registry):
+        from repro.core.metric import encode_queries_for
+        from repro.ivf import record_routes, top_lists
+        from repro.kernels import dispatch
+
+        if self._ivf_route is None:
+            raise ValueError(
+                "scatter search needs enable_ivf_routing() first"
+            )
+        gens = tuple(s.generation for s in self.shards)
+        if gens != self._ivf_route[3]:    # stale under churn: rebuild
+            self.enable_ivf_routing(
+                n_lists=self._ivf_route[0].shape[0],
+                seed=self._ivf_route_seed,
+            )
+        cent_words, owners, default_probes, _ = self._ivf_route
+        q = jnp.asarray(queries, jnp.float32)
+        if q.ndim == 1:
+            q = q[None]
+        nq = q.shape[0]
+        p = max(1, min(probes or default_probes, cent_words.shape[0]))
+        reprs = encode_queries_for("bq2", q / jnp.maximum(
+            jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12
+        ))
+        ops = dispatch.list_scan_ops(self.dim)
+        top = np.asarray(top_lists(ops.scan, reprs, cent_words, p))
+        contact = owners.T[top].any(axis=1)            # (Q, S)
+        record_routes(top, contact.sum(axis=-1), registry=registry)
+
+        all_ids = np.full((nq, self.n_shards, k), -1, dtype=np.int64)
+        all_scores = np.full((nq, self.n_shards, k), -np.inf,
+                             dtype=np.float32)
+        qn = np.asarray(q)
+        for s in range(self.n_shards):
+            rows = np.nonzero(contact[:, s])[0]
+            if rows.size == 0:
+                continue
+            ids, scores = self.shards[s].search(
+                qn[rows], k, ef=ef, filter=filter,
+            )
+            ok = ids >= 0
+            all_ids[rows, s] = np.where(
+                ok, self._to_global(s, np.maximum(ids, 0)), -1
+            )
+            all_scores[rows, s] = np.where(ok, scores, -np.inf)
+        flat_ids = all_ids.reshape(nq, -1)
+        flat_scores = all_scores.reshape(nq, -1)
+        order = np.argsort(-flat_scores, axis=-1)[:, :k]
+        out_scores = np.take_along_axis(flat_scores, order, axis=-1)
+        out_ids = np.take_along_axis(flat_ids, order, axis=-1)
+        out_ids[~np.isfinite(out_scores)] = -1
+        return out_ids, out_scores
+
     # -- search ------------------------------------------------------------
 
     def snapshot(self) -> ShardedIndex:
@@ -254,12 +351,25 @@ class StreamingShardedIndex:
 
     def search(self, queries, *, ef: int = 64, k: int = 10,
                nav: str | None = None, expand: int = 1,
-               mesh=None, filter=None):
+               mesh=None, filter=None, scatter: bool = False,
+               probes: int | None = None, registry=None):
         """Fan-out/merge search over all shards (global ids).
 
         ``filter`` is pushed down per shard: every shard's label bitset
         mask joins its tombstone mask in the fan-out, so only live
-        matching ids reach the top-k merge (``search_sharded``)."""
+        matching ids reach the top-k merge (``search_sharded``).
+
+        ``scatter=True`` routes on the IVF tier instead
+        (``enable_ivf_routing`` first): only shards owning the query's
+        top-``probes`` lists are contacted — each runs its normal local
+        graph search — and their reranked top-k merge by score.  At
+        ``probes = n_lists`` every member-owning shard is contacted, so
+        results coincide with the full fan-out."""
+        if scatter:
+            return self._scatter_search(
+                queries, ef=ef, k=k, probes=probes, filter=filter,
+                registry=registry,
+            )
         return search_sharded(
             self.snapshot(), queries, mesh=mesh, ef=ef, k=k,
             nav=nav, expand=expand, filter=filter,
