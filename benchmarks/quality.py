@@ -1,0 +1,322 @@
+"""Quality chaos benchmark: shadow recall tracking + closed-loop
+remediation (DESIGN.md §14).
+
+The scenario ISSUE 9 caps the quality layer with — one tenant on a
+:class:`~repro.serve.engine.QueryEngine` whose corpus drifts
+mid-stream, with the shadow ground-truth lane armed:
+
+* **stable phase** — a green snapshot serves in bq2.  The shadow
+  sampler's rolling recall estimate (a hash-sampled fraction of live
+  traffic, re-answered exactly) must track the true exact recall of
+  the served results within ``EST_TOL_PT`` points.
+* **drift phase** — an embedding-model rollover: the streaming corpus
+  (and the live queries) churn to SIFT-style non-negative features —
+  the paper's Finding-1 collapse case, constant sign plane — and the
+  engine swaps in the drifted ``freeze()`` snapshot, still navigating
+  bq2: recall collapses.  The estimate must *track the collapse*
+  (same tolerance — an estimator that only works when quality is good
+  is not an estimator), the armed :class:`~repro.obs.DriftMonitor`
+  and the tenant's recall SLO must both raise, and the
+  :class:`~repro.obs.RemediationPolicy` (operator-paced here, so the
+  fidelity measurement is clean) must fire **exactly once** — its
+  re-probe reads red and replans the default nav to the float32
+  ladder.
+* **mitigated phase** — the replanned engine serves on.  The graph
+  itself was linked in collapsed bq space, so the float32 rung over
+  the damaged topology is a *stopgap*: recall improves but does not
+  recover, and the estimator must say so (it keeps tracking exact).
+* **post phase** — the red flag's runbook completes: the live corpus
+  is rebuilt through the applicability probe (which reads red and
+  builds the float32 ladder) and swapped in.  recall@10 must recover
+  to within ``RECOVER_PT`` points of the pre-drift value.
+
+A paired shadow-vs-bare run on the identical workload measures the
+shadow-lane tax at the *default* sampling rate (~1/256) as a QPS
+ratio — a wall-clock latency gate is meaningless on a 1-core CI box,
+a throughput ratio on a paired workload is not.
+
+Knobs (all env):
+
+* ``REPRO_QUALITY_ROUNDS`` (8) — serving rounds per phase;
+* ``REPRO_QUALITY_RATE`` (1) — shadow sampling rate for the fidelity
+  phases (1/rate of traffic gets ground truth; the overhead pair
+  always runs the production default).  Defaults to 1 deliberately:
+  the hash lane samples a *fixed* subset, so at bench scale (~100
+  queries) a 1/4 subset carries ±4-5pt of irreducible
+  subset-vs-population noise in the mid-recall regime — rate 1 makes
+  the estimate-vs-exact gates isolate pipeline correctness (sampling
+  unbiasedness is covered by tests/test_quality.py, the production
+  rate's cost by the overhead pair);
+* ``REPRO_QUALITY_ASSERT`` (0) — enable the CI smoke assertions;
+* ``REPRO_QUALITY_EST_TOL_PT`` (3.0) — estimate-vs-exact tolerance;
+* ``REPRO_QUALITY_RECOVER_PT`` (5.0) — post-remediation recovery gate;
+* ``REPRO_QUALITY_OVERHEAD_PCT`` (5.0) — shadow-lane QPS tax gate,
+  checked only under ``REPRO_QUALITY_ASSERT``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_Q, dataset
+from repro.core.baselines import flat_search
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.data.datasets import euclidean_cv_surrogate
+from repro.obs import DEFAULT_RATE, RemediationPolicy, Ring
+from repro.obs.metrics import get_default_registry
+from repro.serve.engine import QueryEngine
+from repro.stream.mutable import MutableQuIVerIndex
+
+ROUNDS = int(os.environ.get("REPRO_QUALITY_ROUNDS", 8))
+RATE = int(os.environ.get("REPRO_QUALITY_RATE", 1))
+ASSERT = os.environ.get("REPRO_QUALITY_ASSERT", "0") == "1"
+EST_TOL_PT = float(os.environ.get("REPRO_QUALITY_EST_TOL_PT", 3.0))
+RECOVER_PT = float(os.environ.get("REPRO_QUALITY_RECOVER_PT", 5.0))
+OVERHEAD_PCT = float(os.environ.get("REPRO_QUALITY_OVERHEAD_PCT", 5.0))
+
+DATASET = "minilm-surrogate"
+TENANT = "prod"
+EF = 64
+K = 10
+RECALL_SLO = 0.80
+
+PARAMS = BuildParams(m=12, ef_construction=64, prune_pool=64, chunk=256)
+# the remediation rebuild spends more on construction: a red corpus
+# has weaker neighborhood structure, and the rebuild is a one-off
+# operator action, not the steady-state build budget
+REBUILD_PARAMS = BuildParams(
+    m=32, ef_construction=160, prune_pool=160, chunk=256
+)
+
+
+def _serve_rounds(engine, queries, rounds, *, tenant=TENANT):
+    """Closed-loop rounds of the full query set; returns
+    (queries_served, wall_seconds, last_round_served_ids)."""
+    nq, t0, served = 0, time.perf_counter(), None
+    for _ in range(rounds):
+        tickets = [
+            engine.submit(queries[i:i + 8], tenant=tenant)
+            for i in range(0, len(queries), 8)
+        ]
+        engine.pump()
+        served = np.concatenate(
+            [engine.result(t)[0] for t in tickets]
+        )
+        nq += len(queries)
+    return nq, time.perf_counter() - t0, served
+
+
+def _exact_recall(index, queries, served):
+    truth, _ = flat_search(index.vectors, queries, k=K)
+    truth = np.asarray(truth)
+    return float(np.mean([
+        len(set(s.tolist()) & set(t.tolist())) / K
+        for s, t in zip(served, truth)
+    ]))
+
+
+def _phase(engine, queries, *, name):
+    """Serve ROUNDS rounds and measure both sides of the estimator:
+    the shadow lane's rolling estimate (reset per phase) and the exact
+    recall of what was actually served."""
+    engine.shadow.recalls = Ring(engine.shadow.recalls.maxlen)
+    d0 = engine.shadow.drained
+    nq, wall, served = _serve_rounds(engine, queries, ROUNDS)
+    window = engine.shadow.recalls
+    estimate = (
+        float(window.array().mean()) if len(window) else float("nan")
+    )
+    exact = _exact_recall(engine.index, queries, served)
+    return {
+        "name": name,
+        "us_per_call": wall / nq * 1e6,
+        "queries": nq,
+        "shadow_samples": engine.shadow.drained - d0,
+        "recall_estimate": round(estimate, 4),
+        "recall_exact": round(exact, 4),
+        "estimate_err_pt": round(abs(estimate - exact) * 100, 2),
+    }
+
+
+def run():
+    base, queries = dataset(DATASET)
+    base = np.asarray(base, dtype=np.float32)
+    queries = np.asarray(queries, dtype=np.float32)[:BENCH_Q]
+
+    # the streaming corpus the snapshots come from, drift alarms armed
+    churn = MutableQuIVerIndex.build(base, PARAMS, capacity=4 * len(base))
+    monitor = churn.attach_drift_monitor(tenant=TENANT)
+
+    engine = QueryEngine(
+        churn.freeze(), default_k=K, default_ef=EF,
+        shadow={"rate": RATE},
+    )
+    # a small breach window so the drift phase's own samples decide the
+    # SLO verdict (the default 256-sample window would still be half
+    # full of stable-phase measurements)
+    engine.tenants.recall_window = 32
+    engine.tenants.recall_min_samples = 8
+    engine.set_quota(TENANT, qps=1e9, recall_slo=RECALL_SLO)
+    # operator-paced remediation: triggers queue; check() acts — so the
+    # drift phase measures estimator fidelity on the *unremediated*
+    # collapse, then remediates exactly once at the phase boundary
+    policy = RemediationPolicy(engine, auto=False).attach(monitor)
+    engine.warmup(buckets=(8,))
+
+    rows = []
+
+    # -- phase 1: stable (green snapshot, estimate tracks exact) -----------
+    stable = _phase(engine, queries, name="quality_stable")
+    rows.append(stable)
+
+    # -- phase 2: drift (collapsed corpus served in bq2, no remediation
+    # yet: the estimator must track the collapse) --------------------------
+    # an embedding-model rollover to SIFT-style non-negative features
+    # (euclidean_cv_surrogate at the index's dim): the sign plane goes
+    # constant — the paper's Finding-1 red zone — while the float32
+    # geometry stays healthy; live queries re-embed under the new
+    # model too, so phases 2/3 serve and score the drifted query set
+    dim = base.shape[1]
+    rolled = euclidean_cv_surrogate(len(base) + len(queries), d=dim)
+    drift_rng = np.random.default_rng(1234)
+    qidx = drift_rng.choice(len(rolled), size=len(queries), replace=False)
+    mask = np.ones(len(rolled), dtype=bool)
+    mask[qidx] = False
+    bad = rolled[mask][: len(base)]
+    dq = rolled[qidx] + 0.02 * drift_rng.standard_normal(
+        (len(queries), dim)
+    ).astype(np.float32)
+    drift_queries = (
+        dq / np.linalg.norm(dq, axis=1, keepdims=True)
+    ).astype(np.float32)
+
+    green_rows = np.nonzero(churn.live)[0]
+    churn.insert(bad)
+    churn.delete(green_rows)              # live set is now all-collapsed
+    engine.swap_index(churn.freeze())
+    drift = _phase(engine, drift_queries, name="quality_drift")
+    drift["drift_band"] = monitor.band
+    drift["slo_breached"] = engine.tenants.recall_breached(TENANT)
+    rows.append(drift)
+
+    # -- remediation: all queued triggers coalesce into one action --------
+    fired = policy.check()
+    actions = dict(policy.action_counts)
+    rows.append({
+        "name": "quality_remediation",
+        "action": fired["action"] if fired else None,
+        "reprobe_verdict": (
+            policy.last_report.verdict if policy.last_report else None
+        ),
+        "nav_after": policy._current_nav(),
+        "replans": actions["replan"],
+        "flag_red": actions["flag_red"],
+        "pending_triggers": policy.report()["pending_triggers"],
+    })
+
+    # -- phase 3a: stopgap serving on the replanned engine -----------------
+    # the drifted rows were *linked* in collapsed bq space, so the
+    # float32 rung over the damaged topology mitigates but cannot fully
+    # recover — and the estimator has to keep tracking exactly that
+    mitigated = _phase(engine, drift_queries, name="quality_mitigated")
+    rows.append(mitigated)
+
+    # -- phase 3b: the red flag's runbook — rebuild through the probe ------
+    # a red corpus invalidates the bq-built graph, not just the serving
+    # nav: rebuild the live corpus with metric="auto" (the probe reads
+    # red and builds the float32 ladder) and swap the snapshot in
+    rebuilt = QuIVerIndex.build(
+        np.asarray(engine.index.vectors), REBUILD_PARAMS, metric="auto"
+    )
+    engine.swap_index(rebuilt)
+    post = _phase(engine, drift_queries, name="quality_post_remediation")
+    post["rebuild_verdict"] = (
+        rebuilt.report.verdict if rebuilt.report else None
+    )
+    post["rebuild_nav"] = rebuilt.policy.nav if rebuilt.policy else None
+    post["recovered_to_pt"] = round(
+        (stable["recall_exact"] - post["recall_exact"]) * 100, 2
+    )
+    rows.append(post)
+
+    # -- shadow-lane tax: paired runs at the production sampling rate ------
+    snap = MutableQuIVerIndex.build(
+        base, PARAMS, capacity=len(base) + 1
+    ).freeze()
+    shadow_engine = QueryEngine(snap, default_k=K, default_ef=EF,
+                                shadow={"rate": DEFAULT_RATE})
+    bare_engine = QueryEngine(snap, default_k=K, default_ef=EF)
+    shadow_engine.warmup(buckets=(8,))
+    bare_engine.warmup(buckets=(8,))
+    _serve_rounds(shadow_engine, queries, 2)          # warm both paths
+    _serve_rounds(bare_engine, queries, 2)
+    nq_s, wall_s, _ = _serve_rounds(shadow_engine, queries, ROUNDS)
+    nq_b, wall_b, _ = _serve_rounds(bare_engine, queries, ROUNDS)
+    qps_shadow, qps_bare = nq_s / wall_s, nq_b / wall_b
+    overhead_pct = (qps_bare - qps_shadow) / qps_bare * 100.0
+    rows.append({
+        "name": "quality_shadow_overhead",
+        "rate": DEFAULT_RATE,
+        "qps_shadow": round(qps_shadow, 1),
+        "qps_bare": round(qps_bare, 1),
+        "overhead_pct": round(overhead_pct, 2),
+        "sampled": shadow_engine.shadow.sampled,
+    })
+
+    reg = get_default_registry()
+    remediation_counter = reg.counter(
+        "quiver_remediation_actions_total",
+        "remediation-ladder actions by trigger",
+        labels=("action", "trigger"),
+    )
+    span_rep = engine.obs.tracer.report() if engine.obs else {}
+
+    if ASSERT:
+        assert stable["estimate_err_pt"] <= EST_TOL_PT, (
+            f"stable-phase estimate off by {stable['estimate_err_pt']}pt"
+            f" > {EST_TOL_PT}pt"
+        )
+        assert drift["estimate_err_pt"] <= EST_TOL_PT, (
+            f"drift-phase estimate off by {drift['estimate_err_pt']}pt"
+            f" > {EST_TOL_PT}pt"
+        )
+        assert mitigated["estimate_err_pt"] <= EST_TOL_PT, (
+            f"mitigated-phase estimate off by "
+            f"{mitigated['estimate_err_pt']}pt > {EST_TOL_PT}pt"
+        )
+        assert drift["recall_exact"] < stable["recall_exact"] - 0.2, (
+            "drift phase did not actually collapse recall"
+        )
+        assert mitigated["recall_exact"] > drift["recall_exact"], (
+            "float32 stopgap did not improve on the collapsed bq2 serve"
+        )
+        assert drift["slo_breached"], "recall SLO never breached"
+        assert monitor.band == "red", "drift monitor missed the collapse"
+        assert actions["replan"] == 1 and sum(
+            actions[a] for a in ("replan", "escalate_ef", "flag_red")
+        ) == 1, f"remediation fired other than exactly once: {actions}"
+        assert post["recovered_to_pt"] <= RECOVER_PT, (
+            f"post-remediation recall {post['recall_exact']} is "
+            f"{post['recovered_to_pt']}pt below pre-drift"
+        )
+        assert remediation_counter.value(
+            action="replan", trigger=fired["trigger"]
+        ) >= 1, "remediation action not visible as a counter"
+        assert span_rep.get("remediate", {}).get("count", 0) >= 1, (
+            "remediation action not visible as a span"
+        )
+        assert overhead_pct <= OVERHEAD_PCT, (
+            f"shadow-lane overhead {overhead_pct:.1f}% > {OVERHEAD_PCT}%"
+        )
+
+    extra = {
+        "remediation": policy.report(),
+        "drift": monitor.report(),
+        "tenant_report": engine.tenants.report(),
+        "shadow_report": engine.shadow.report(),
+    }
+    return rows, extra

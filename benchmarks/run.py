@@ -22,6 +22,7 @@ from benchmarks import (
     filtered,
     kernel_bench,
     multitenant,
+    quality,
     serve,
     streaming,
     table2_memory,
@@ -45,6 +46,7 @@ TABLES = {
     "filtered": filtered.run,
     "serve": serve.run,
     "multitenant": multitenant.run,
+    "quality": quality.run,
 }
 
 

@@ -1,9 +1,11 @@
-"""Telemetry walkthrough: metrics, spans, tenants, drift (DESIGN.md §12).
+"""Telemetry walkthrough: metrics, spans, tenants, drift, recall SLOs
+(DESIGN.md §12, §14).
 
 A compressed tour of the observability layer: a QueryEngine serving two
 tenants (one quota'd) with its metrics streamed to a JSONL sink and
-scrapable as Prometheus text, plus a drifting streaming corpus raising
-a probe-drift alarm.
+scrapable as Prometheus text, a drifting streaming corpus raising a
+probe-drift alarm, and the shadow ground-truth lane turning that drift
+into a recall-SLO breach the remediation ladder answers.
 
     PYTHONPATH=src python examples/telemetry.py
 """
@@ -18,7 +20,12 @@ import numpy as np
 from repro.core.index import QuIVerIndex
 from repro.core.vamana import BuildParams
 from repro.data.datasets import make_dataset
-from repro.obs import JsonlSink, ObsHub, PrometheusServer
+from repro.obs import (
+    JsonlSink,
+    ObsHub,
+    PrometheusServer,
+    RemediationPolicy,
+)
 from repro.serve.engine import QueryEngine
 from repro.stream.mutable import MutableQuIVerIndex
 
@@ -86,6 +93,36 @@ def main():
           f"alarms={len(monitor.alarms)}")
     for a in monitor.alarms:
         print(" ", a.message())
+
+    # 6. recall SLO + closed-loop remediation (DESIGN.md §14): serve
+    # the drifted corpus with the shadow ground-truth lane armed — a
+    # hash-sampled slice of traffic is re-answered exactly off the hot
+    # path, the tenant's rolling recall p50 breaches its SLO, and the
+    # remediation ladder re-probes (red) and replans the nav family
+    drifted = QueryEngine(
+        stream.freeze(), default_k=5, default_ef=64,
+        shadow={"rate": 1},            # sample everything for the demo
+    )
+    drifted.tenants.recall_window = 64
+    drifted.tenants.recall_min_samples = 8
+    drifted.set_quota("drifty", qps=1e9, recall_slo=0.95)
+    policy = RemediationPolicy(drifted, auto=False).attach(monitor)
+    dq = rng.normal(size=(32, 64)).astype(np.float32)
+    t = drifted.submit(dq, tenant="drifty")
+    drifted.pump()
+    drifted.result(t)
+    shadow = drifted.shadow.report()
+    ledger = drifted.tenants.report()["tenants"]["drifty"]
+    print(f"shadow lane: sampled={shadow['sampled']} "
+          f"recall_mean={shadow['recall_mean']}")
+    print(f"tenant drifty: recall_p50={ledger['recall_p50']} "
+          f"slo={ledger['recall_slo']} "
+          f"breached={ledger['recall_breached']}")
+    fired = policy.check()
+    if fired:
+        print(f"remediation: action={fired['action']} "
+              f"trigger={fired['trigger']} "
+              f"nav now {policy._current_nav()}")
 
     hub.close()
 

@@ -256,6 +256,59 @@ class QuIVerIndex:
         )
         return self.ivf
 
+    # -- replanning (closed-loop remediation, DESIGN.md §14) ---------------
+
+    def replan(
+        self,
+        *,
+        nav: NavKind,
+        ef_scale: int | None = None,
+        adaptive: bool | None = None,
+        source: str = "replan",
+    ) -> NavPolicy:
+        """Switch the index's default nav policy at serve time.
+
+        The remediation path (``repro.obs.remediate``) calls this when
+        live recall evidence contradicts the build-time verdict: the
+        new :class:`NavPolicy` becomes the default for every search
+        that leaves ``nav`` unset, and the *old* default's compiled
+        plans are invalidated from the :class:`PlanCache` — targeted,
+        so every other nav family's executables survive untouched
+        (zero retraces for unaffected traffic).
+
+        ``ef_scale`` / ``adaptive`` default to the current policy's
+        values (or the :class:`NavPolicy` defaults when none is set).
+        """
+        if nav == "ivf" and self.ivf is None:
+            raise ValueError(
+                "replan(nav='ivf') needs a coarse partition; call "
+                "build_ivf() first"
+            )
+        if nav == "float32" and self.vectors is None:
+            raise ValueError(
+                "replan(nav='float32') needs the cold vector tier; "
+                "this index is vector-free"
+            )
+        old_nav = (
+            self.policy.nav if self.policy is not None else self.metric_kind
+        )
+        if self.policy is not None:
+            kw = {"nav": nav, "source": source}
+            if ef_scale is not None:
+                kw["ef_scale"] = int(ef_scale)
+            if adaptive is not None:
+                kw["adaptive"] = bool(adaptive)
+            self.policy = dataclasses.replace(self.policy, **kw)
+        else:
+            self.policy = NavPolicy(
+                nav=nav, source=source,
+                **({} if ef_scale is None else {"ef_scale": int(ef_scale)}),
+                **({} if adaptive is None else {"adaptive": bool(adaptive)}),
+            )
+        if nav != old_nav and self._plan_cache is not None:
+            self._plan_cache.invalidate(nav=old_nav)
+        return self.policy
+
     # -- labels (filtered search, DESIGN.md §9) ----------------------------
 
     def attach_labels(
@@ -366,6 +419,10 @@ class QuIVerIndex:
         # the hot path: every ivf plan gathers from it per query
         ivf_bytes = self.ivf.memory_bytes() if self.ivf is not None else 0
         cold = self.vectors.size * 4 if self.vectors is not None else 0
+        # shadow-sampler host state (pending ground-truth copies + the
+        # recall window) — attached by repro.obs.quality.ShadowSampler
+        shadow = getattr(self, "shadow", None)
+        shadow_bytes = shadow.memory_bytes() if shadow is not None else 0
         hot = sig_bytes + adj_bytes + label_bytes + ivf_bytes
         out = {
             "hot_signature_bytes": int(sig_bytes),
@@ -374,7 +431,8 @@ class QuIVerIndex:
             "hot_ivf_bytes": int(ivf_bytes),
             "hot_total_bytes": int(hot),
             "cold_vector_bytes": int(cold),
-            "total_bytes": int(hot + cold),
+            "host_shadow_bytes": int(shadow_bytes),
+            "total_bytes": int(hot + cold + shadow_bytes),
         }
         if self.policy is not None:
             # auto-built indexes report the serving policy next to the

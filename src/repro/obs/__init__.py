@@ -14,6 +14,10 @@ The observability substrate of the serving stack:
   per-tenant SLO accounting (:class:`TenantLedger`);
 * :mod:`repro.obs.drift` — probe-drift alarms: the paper's
   green/amber/red boundary re-scored live under streaming churn;
+* :mod:`repro.obs.quality` — shadow ground-truth sampling: exact
+  recall@k for a deterministic fraction of live traffic (DESIGN.md §14);
+* :mod:`repro.obs.remediate` — the closed loop: drift alarms and
+  recall-SLO breaches walk an ordered remediation ladder;
 * :mod:`repro.obs.hub` — :class:`ObsHub` bundling the above,
   :class:`PeriodicReporter` push loop, env-driven ``autostart``.
 """
@@ -30,6 +34,13 @@ from repro.obs.metrics import (
     get_default_registry,
     reset_default_registry,
 )
+from repro.obs.quality import (
+    DEFAULT_RATE,
+    ShadowSampler,
+    shadow_hash,
+    should_sample,
+)
+from repro.obs.remediate import ACTIONS, RemediationPolicy
 from repro.obs.sinks import (
     JsonlSink,
     PrometheusServer,
@@ -47,9 +58,11 @@ from repro.obs.tenant import (
 from repro.obs.tracing import Span, Tracer
 
 __all__ = [
+    "ACTIONS",
     "BANDS",
     "Counter",
     "DEFAULT_BUCKETS",
+    "DEFAULT_RATE",
     "DEFAULT_TENANT",
     "DriftAlarm",
     "DriftMonitor",
@@ -60,7 +73,9 @@ __all__ = [
     "ObsHub",
     "PeriodicReporter",
     "PrometheusServer",
+    "RemediationPolicy",
     "Ring",
+    "ShadowSampler",
     "Sink",
     "Span",
     "StdoutSink",
@@ -72,5 +87,7 @@ __all__ = [
     "get_default_registry",
     "render_prometheus",
     "reset_default_registry",
+    "shadow_hash",
+    "should_sample",
     "sinks_from_env",
 ]

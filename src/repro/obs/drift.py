@@ -97,6 +97,7 @@ class DriftMonitor:
         self.band = None                  # unknown until first check()
         self.alarms: list[DriftAlarm] = []
         self.events = collections.deque(maxlen=max_events)
+        self._subs: list = []
         reg = registry if registry is not None else get_default_registry()
         self._c_alarms = reg.counter(
             "quiver_drift_alarms_total",
@@ -112,6 +113,20 @@ class DriftMonitor:
             "live-set drift band (0=green 1=amber 2=red)",
             labels=("tenant",),
         )
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(alarm)`` to fire on every raised
+        :class:`DriftAlarm` (band worsenings only, same events that land
+        in ``self.alarms``) — the hook the closed-loop
+        :class:`~repro.obs.remediate.RemediationPolicy` attaches to."""
+        self._subs.append(fn)
+
+    def _raise(self, event: DriftAlarm) -> DriftAlarm:
+        self.alarms.append(event)
+        self._c_alarms.inc(tenant=self.tenant, band=event.band)
+        for fn in list(self._subs):
+            fn(event)
+        return event
 
     # -- banding -----------------------------------------------------------
 
@@ -151,9 +166,7 @@ class DriftMonitor:
         )
         self.events.append(event)
         if _BAND_CODE[band] > _BAND_CODE[prev]:
-            self.alarms.append(event)
-            self._c_alarms.inc(tenant=self.tenant, band=band)
-            return event
+            return self._raise(event)
         return None
 
     def check_report(self, report) -> DriftAlarm | None:
@@ -176,9 +189,7 @@ class DriftMonitor:
         )
         self.events.append(event)
         if _BAND_CODE[band] > _BAND_CODE[prev]:
-            self.alarms.append(event)
-            self._c_alarms.inc(tenant=self.tenant, band=band)
-            return event
+            return self._raise(event)
         return None
 
     def report(self) -> dict:

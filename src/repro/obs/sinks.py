@@ -42,18 +42,48 @@ class Sink:
 
 
 class JsonlSink(Sink):
-    """Append-one-JSON-line-per-snapshot file sink."""
+    """Append-one-JSON-line-per-snapshot file sink with size rotation.
 
-    def __init__(self, path):
+    A long-running serve emits a snapshot per admission window; without
+    a bound the flight recorder eventually fills the disk.  When the
+    live file would exceed ``max_bytes`` the sink rolls it logrotate
+    style — ``path`` -> ``path.1`` -> ... -> ``path.<keep>``, oldest
+    dropped — before writing, so every line lands whole in exactly one
+    generation and the newest data is always in ``path`` itself.
+    ``max_bytes=0`` (the default) disables rotation.
+    """
+
+    def __init__(self, path, *, max_bytes: int = 0, keep: int = 3):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.path = pathlib.Path(path)
         self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = int(max_bytes)
+        self.keep = int(keep)
         self._fh = self.path.open("a")
         self._lock = threading.Lock()
 
+    def _rotate(self) -> None:
+        self._fh.close()
+        oldest = self.path.with_name(f"{self.path.name}.{self.keep}")
+        oldest.unlink(missing_ok=True)
+        for i in range(self.keep - 1, 0, -1):
+            src = self.path.with_name(f"{self.path.name}.{i}")
+            if src.exists():
+                src.rename(self.path.with_name(f"{self.path.name}.{i + 1}"))
+        self.path.rename(self.path.with_name(f"{self.path.name}.1"))
+        self._fh = self.path.open("a")
+
     def emit(self, record: dict) -> None:
-        line = json.dumps(record, default=_json_default)
+        line = json.dumps(record, default=_json_default) + "\n"
         with self._lock:
-            self._fh.write(line + "\n")
+            if (
+                self.max_bytes > 0
+                and self._fh.tell() > 0
+                and self._fh.tell() + len(line) > self.max_bytes
+            ):
+                self._rotate()
+            self._fh.write(line)
             self._fh.flush()
 
     def close(self) -> None:
@@ -184,12 +214,18 @@ class PrometheusServer:
 
 def sinks_from_env(env=None) -> list[Sink]:
     """Build the sink list from the env the launcher staged:
-    ``REPRO_OBS_JSONL`` (file path), ``REPRO_OBS_STDOUT`` (=1)."""
+    ``REPRO_OBS_JSONL`` (file path), ``REPRO_OBS_JSONL_MAX_BYTES`` /
+    ``REPRO_OBS_JSONL_KEEP`` (size rotation), ``REPRO_OBS_STDOUT``
+    (=1)."""
     env = os.environ if env is None else env
     sinks: list[Sink] = []
     path = env.get("REPRO_OBS_JSONL")
     if path:
-        sinks.append(JsonlSink(path))
+        sinks.append(JsonlSink(
+            path,
+            max_bytes=int(env.get("REPRO_OBS_JSONL_MAX_BYTES", "0")),
+            keep=int(env.get("REPRO_OBS_JSONL_KEEP", "3")),
+        ))
     if env.get("REPRO_OBS_STDOUT", "0") == "1":
         sinks.append(StdoutSink())
     return sinks

@@ -33,10 +33,15 @@ DEFAULT_TENANT = "default"
 
 @dataclasses.dataclass(frozen=True)
 class TenantQuota:
-    """Admission budget: sustained ``qps`` with ``burst`` headroom."""
+    """Admission budget: sustained ``qps`` with ``burst`` headroom, plus
+    an optional quality floor — the rolling shadow-recall p50 the tenant
+    was promised (DESIGN.md §14).  Unlike qps, the recall SLO is not
+    enforced at admission (a query can't be rejected for future recall);
+    breaches are *events* the remediation policy subscribes to."""
 
     qps: float
     burst: float | None = None       # default: 2 * qps (min 1)
+    recall_slo: float | None = None  # rolling recall@k p50 floor
 
     def capacity(self) -> float:
         if self.burst is not None:
@@ -79,6 +84,9 @@ class TenantStats:
     queries: int = 0                 # admitted queries
     rejected_queries: int = 0
     latencies: Ring = None           # set by the ledger (window-sized)
+    recalls: Ring = None             # shadow recall@k window (ledger-set)
+    recall_breaches: int = 0         # breached-state entries (not samples)
+    recall_breached: bool = False    # currently below the recall SLO
 
 
 class TenantLedger:
@@ -90,13 +98,20 @@ class TenantLedger:
         *,
         registry: MetricsRegistry | None = None,
         latency_window: int = 1024,
+        recall_window: int = 256,
+        recall_min_samples: int = 16,
         clock=time.monotonic,
     ):
         self.clock = clock
         self.latency_window = int(latency_window)
+        self.recall_window = int(recall_window)
+        # breach evaluation needs a minimally credible window: a single
+        # unlucky shadow sample must not page anyone
+        self.recall_min_samples = int(recall_min_samples)
         self._quotas: dict[str, TenantQuota] = {}
         self._buckets: dict[str, TokenBucket] = {}
         self._stats: dict[str, TenantStats] = {}
+        self._breach_subs: list = []
         self.quota_violations = 0
         self._reg = registry
         if registry is not None:
@@ -118,12 +133,23 @@ class TenantLedger:
                 "quiver_tenant_quota_tokens",
                 "remaining admission tokens", labels=("tenant",),
             )
+            self._h_recall = registry.histogram(
+                "quiver_tenant_recall",
+                "shadow-sampled recall@k per tenant", labels=("tenant",),
+                buckets=(0.1, 0.25, 0.5, 0.7, 0.8, 0.9, 0.95, 0.99, 1.0),
+                window=recall_window,
+            )
+            self._c_breaches = registry.counter(
+                "quiver_recall_slo_breaches_total",
+                "recall-SLO breached-state entries", labels=("tenant",),
+            )
 
     # -- quota -------------------------------------------------------------
 
     def set_quota(self, tenant: str, qps: float,
-                  burst: float | None = None) -> TenantQuota:
-        q = TenantQuota(qps=qps, burst=burst)
+                  burst: float | None = None,
+                  recall_slo: float | None = None) -> TenantQuota:
+        q = TenantQuota(qps=qps, burst=burst, recall_slo=recall_slo)
         self._quotas[tenant] = q
         self._buckets[tenant] = TokenBucket(q, self.clock())
         return q
@@ -135,7 +161,8 @@ class TenantLedger:
         s = self._stats.get(tenant)
         if s is None:
             s = self._stats[tenant] = TenantStats(
-                latencies=Ring(self.latency_window)
+                latencies=Ring(self.latency_window),
+                recalls=Ring(self.recall_window),
             )
         return s
 
@@ -189,6 +216,55 @@ class TenantLedger:
             if self._reg is not None:
                 self._h_latency.observe(latency, tenant=tenant)
 
+    # -- recall SLO --------------------------------------------------------
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(event_dict)`` for recall-SLO breach events.
+        Fired once per breached-state *entry* (edge-triggered, like the
+        drift monitor's band crossings), not once per bad sample."""
+        self._breach_subs.append(fn)
+
+    def recall_breached(self, tenant: str) -> bool:
+        return self.stats(tenant).recall_breached
+
+    def observe_recall(self, tenant: str, recall: float) -> bool:
+        """Account one shadow-sampled recall@k measurement.
+
+        Appends to the tenant's rolling window, re-evaluates the recall
+        SLO over it, and returns whether the tenant is currently in
+        breach.  State transitions into breach increment the breach
+        counter and notify subscribers; recovery (window p50 back above
+        the floor) silently clears the flag so the next degradation
+        alarms again.
+        """
+        s = self.stats(tenant)
+        s.recalls.append(float(recall))
+        if self._reg is not None:
+            self._h_recall.observe(float(recall), tenant=tenant)
+        q = self._quotas.get(tenant)
+        if q is None or q.recall_slo is None:
+            return False
+        if len(s.recalls) < self.recall_min_samples:
+            return s.recall_breached
+        p50 = s.recalls.percentile(50)
+        if p50 < q.recall_slo:
+            if not s.recall_breached:
+                s.recall_breached = True
+                s.recall_breaches += 1
+                if self._reg is not None:
+                    self._c_breaches.inc(tenant=tenant)
+                event = {
+                    "kind": "recall_slo", "tenant": tenant,
+                    "recall_p50": float(p50),
+                    "recall_slo": float(q.recall_slo),
+                    "window": len(s.recalls),
+                }
+                for fn in list(self._breach_subs):
+                    fn(event)
+        else:
+            s.recall_breached = False
+        return s.recall_breached
+
     # -- reporting ---------------------------------------------------------
 
     def tenants(self) -> list[str]:
@@ -221,5 +297,17 @@ class TenantLedger:
                 ),
                 "quota_qps": q.qps if q else None,
                 "quota_burst": q.capacity() if q else None,
+                "recall_p50": (
+                    round(s.recalls.percentile(50), 4)
+                    if s.recalls is not None and len(s.recalls) else None
+                ),
+                "recall_n": (
+                    len(s.recalls) if s.recalls is not None else 0
+                ),
+                "recall_slo": (
+                    q.recall_slo if q is not None else None
+                ),
+                "recall_breaches": s.recall_breaches,
+                "recall_breached": s.recall_breached,
             }
         return out

@@ -71,6 +71,12 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.executions = 0
+        self.invalidated_plans = 0
+        # (plan, bucket) shapes evicted by invalidate(): their historic
+        # trace events stay in the counters, so retrace accounting
+        # subtracts them — a post-replan recompile is intended work, not
+        # an accounting anomaly
+        self.invalidated_shapes = 0
         # telemetry hub (repro.obs.ObsHub, DESIGN.md §12): set by the
         # serve engine (or any owner) to land per-plan stage timings in
         # ``quiver_plan_seconds{stage,plan}`` and escalation counts in
@@ -329,6 +335,30 @@ class PlanCache:
             backend=backend, reprs=self.encode(plan, queries),
         )
 
+    # -- invalidation ------------------------------------------------------
+
+    def invalidate(self, *, nav: str) -> int:
+        """Evict every compiled program and shape record whose plan
+        navigates in ``nav``; returns the number of plans evicted.
+
+        This is the surgical half of :meth:`QuIVerIndex.replan`: when
+        remediation swaps the default nav policy, only the plans of the
+        *abandoned* family are dropped — every other plan (forced-nav
+        traffic, other k/ef shapes) keeps its program object, so their
+        steady-state serve sees zero retraces.  Evicted plans recompile
+        on next use (counted as misses, compensated out of the retrace
+        audit).
+        """
+        victims = {p for p in self._programs if p.nav == nav}
+        victims |= {p for p, _ in self._seen if p.nav == nav}
+        for p in victims:
+            self._programs.pop(p, None)
+        evicted = {pb for pb in self._seen if pb[0].nav == nav}
+        self._seen -= evicted
+        self.invalidated_shapes += len(evicted)
+        self.invalidated_plans += len(victims)
+        return len(victims)
+
     # -- warmup & accounting ----------------------------------------------
 
     def warmup(
@@ -373,8 +403,10 @@ class PlanCache:
             "hits": self.hits,
             "misses": self.misses,
             "hit_rate": self.hits / lookups if lookups else 1.0,
+            "invalidated_plans": self.invalidated_plans,
             "trace_events": tr["total_traces"],
-            "retraces": tr["total_traces"] - len(self._seen),
+            "retraces": (tr["total_traces"] - len(self._seen)
+                         - self.invalidated_shapes),
         }
 
     def trace_prefix(self) -> str:

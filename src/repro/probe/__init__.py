@@ -14,6 +14,7 @@ component:
 """
 
 from repro.probe.diagnostics import (
+    DEFAULT_CLUSTER_M,
     DEFAULT_K,
     DEFAULT_QUERIES,
     DEFAULT_SAMPLE,
@@ -21,6 +22,7 @@ from repro.probe.diagnostics import (
     entropy_from_counts,
     probe_corpus,
     probe_signatures,
+    report_from_accumulator,
 )
 from repro.probe.incremental import ProbeAccumulator
 from repro.probe.policy import (
@@ -39,6 +41,7 @@ from repro.probe.report import (
 
 __all__ = [
     "CompatibilityReport",
+    "DEFAULT_CLUSTER_M",
     "DEFAULT_K",
     "DEFAULT_QUERIES",
     "DEFAULT_SAMPLE",
@@ -53,6 +56,7 @@ __all__ = [
     "merge_reports",
     "probe_corpus",
     "probe_signatures",
+    "report_from_accumulator",
     "resolve_schedule",
     "select_policy",
 ]

@@ -96,6 +96,15 @@ class ProbeAccumulator:
     def strong_entropy(self) -> float:
         return entropy_from_counts(self.strong_counts, self.n)
 
+    def report(self, *, k: int = 10, thresholds=None):
+        """Signature-statistics :class:`CompatibilityReport` from the
+        exact live counts — the remediation ladder's cheapest re-probe
+        (see :func:`repro.probe.diagnostics.report_from_accumulator`)."""
+        from repro.probe.diagnostics import report_from_accumulator
+        if thresholds is None:
+            return report_from_accumulator(self, k=k)
+        return report_from_accumulator(self, k=k, thresholds=thresholds)
+
     def __eq__(self, other) -> bool:
         return (
             isinstance(other, ProbeAccumulator)

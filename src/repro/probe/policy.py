@@ -131,11 +131,16 @@ def select_policy(
 
     ``have_ivf=True`` (the index carries a coarse partition, i.e. it was
     built with ``ivf_candidates``) makes the ``ivf`` family the green
-    default: on green corpora the flat top-p list scan matches graph
+    default *when the probe also measures strong coarse cluster
+    structure* (``cluster_concentration >= thresholds.cluster_strong``):
+    on clustered green corpora the flat top-p list scan matches graph
     recall at the same signature fidelity with no traversal, and
-    escalation widens ``probes`` instead of ef.  Amber/red verdicts
-    never select ivf — a quantization-stressed corpus needs the graph's
-    adaptive widening or an off-BQ rung, not a coarser candidate stage.
+    escalation widens ``probes`` instead of ef.  A green corpus without
+    list-level concentration keeps the graph — its neighborhoods don't
+    align with any coarse partition, so list scans would need probes ~L
+    to match recall.  Amber/red verdicts never select ivf — a
+    quantization-stressed corpus needs the graph's adaptive widening or
+    an off-BQ rung, not a coarser candidate stage.
     """
     verdict = report.verdict
     # corpus-calibrated escalation threshold: serve-time queries whose
@@ -145,7 +150,13 @@ def select_policy(
     if not (margin == margin):            # NaN: signature-only probe
         margin = NavPolicy(nav="bq2").escalate_margin
     if verdict == "green":
-        if have_ivf:
+        # NaN concentration (report predates the statistic, e.g. loaded
+        # from an old archive) keeps the pre-gate behavior: a green
+        # verdict already implies usable neighborhood structure
+        cluster = report.cluster_concentration
+        clustered = not (cluster == cluster) \
+            or cluster >= report.thresholds.cluster_strong
+        if have_ivf and clustered:
             return NavPolicy(nav="ivf", source="probe")
         return NavPolicy(nav="bq2", source="probe")
     if verdict == "amber":

@@ -52,12 +52,19 @@ class Thresholds:
     cos_std_red: float = 0.05        # concentration of measure -> no structure
     agreement_red: float = 0.45      # BQ cannot rank even a small sample
     agreement_green: float = 0.70    # BQ ranking ~matches float32
+    # coarse cluster structure: raw gap between the mean top-m neighbor
+    # cosine and the overall mean pairwise cosine in the sample.
+    # Clustered green tiers measure 0.21-0.52; structureless data
+    # (random sphere 0.09, sift-like 0.08) has no gap for an IVF
+    # partition to exploit.  Gates the green -> ivf auto-selection.
+    cluster_strong: float = 0.15
 
 DEFAULT_THRESHOLDS = Thresholds()
 
 _FLOAT_FIELDS = (
     "cos_mean", "cos_std", "sign_entropy", "strong_entropy",
     "inter_bit_corr", "bq_agreement", "margin_p30",
+    "cluster_concentration",
 )
 _INT_FIELDS = ("n_sampled", "n_queries", "k", "dim", "seed")
 
@@ -86,6 +93,12 @@ class CompatibilityReport:
     # margin (see repro.core.beam.beam_margin): the corpus-calibrated
     # escalation threshold of the adaptive-rerank schedule.
     margin_p30: float = float("nan")
+    # mean top-m-neighbor cosine minus the overall mean pairwise cosine
+    # in the sample: how much nearer a row's coarse neighborhood is than
+    # the bulk.  NaN for signature-only probes (needs cosine geometry).
+    # >= thresholds.cluster_strong means the corpus has list-level
+    # structure an IVF partition can exploit.
+    cluster_concentration: float = float("nan")
     thresholds: Thresholds = DEFAULT_THRESHOLDS
 
     @property
@@ -137,14 +150,20 @@ class CompatibilityReport:
         """Rebuild from an index archive; None when it carries no probe."""
         if prefix + "cos_mean" not in z:
             return None
-        kw = {name: float(z[prefix + name][()]) for name in _FLOAT_FIELDS}
+        # archives written before a statistic existed simply omit it:
+        # missing floats load as NaN (the "unknown" value every verdict
+        # rule already handles), missing thresholds keep their defaults
+        kw = {
+            name: float(z[prefix + name][()])
+            for name in _FLOAT_FIELDS if prefix + name in z
+        }
         kw.update(
             {name: int(z[prefix + name][()]) for name in _INT_FIELDS}
         )
         th = z[prefix + "thresholds"]
         names = [f.name for f in dataclasses.fields(Thresholds)]
         kw["thresholds"] = Thresholds(
-            **{n: float(th[i]) for i, n in enumerate(names)}
+            **{n: float(v) for n, v in zip(names, th)}
         )
         return cls(**kw)
 
@@ -174,6 +193,18 @@ def merge_reports(reports) -> CompatibilityReport:
     def wmean(name):
         return float(sum(wi * getattr(r, name) for wi, r in zip(w, reports)))
 
+    def nan_wmean(name):
+        # weighted mean over the shards that measured the statistic;
+        # NaN when none did (signature-only fleets)
+        pairs = [
+            (wi, getattr(r, name)) for wi, r in zip(w, reports)
+            if not math.isnan(getattr(r, name))
+        ]
+        if not pairs:
+            return float("nan")
+        tot = sum(wi for wi, _ in pairs)
+        return float(sum(wi * v for wi, v in pairs) / max(tot, 1e-12))
+
     # pooled variance: E[x^2] - E[x]^2 over the weighted mixture
     cos_mean = wmean("cos_mean")
     second = sum(
@@ -181,16 +212,6 @@ def merge_reports(reports) -> CompatibilityReport:
         for wi, r in zip(w, reports)
     )
     cos_std = float(np.sqrt(max(second - cos_mean ** 2, 0.0)))
-
-    agr_w = [
-        (wi, r.bq_agreement) for wi, r in zip(w, reports)
-        if not math.isnan(r.bq_agreement)
-    ]
-    if agr_w:
-        tot = sum(wi for wi, _ in agr_w)
-        agreement = float(sum(wi * a for wi, a in agr_w) / tot)
-    else:
-        agreement = float("nan")
 
     return CompatibilityReport(
         n_sampled=int(sum(r.n_sampled for r in reports)),
@@ -203,16 +224,10 @@ def merge_reports(reports) -> CompatibilityReport:
         sign_entropy=wmean("sign_entropy"),
         strong_entropy=wmean("strong_entropy"),
         inter_bit_corr=wmean("inter_bit_corr"),
-        bq_agreement=agreement,
+        bq_agreement=nan_wmean("bq_agreement"),
         # weighted mean approximates the pooled percentile; exact
         # pooling would need the per-shard margin samples themselves
-        margin_p30=(
-            float(sum(wi * r.margin_p30 for wi, r in zip(w, reports)
-                      if not math.isnan(r.margin_p30))
-                  / max(sum(wi for wi, r in zip(w, reports)
-                            if not math.isnan(r.margin_p30)), 1e-12))
-            if any(not math.isnan(r.margin_p30) for r in reports)
-            else float("nan")
-        ),
+        margin_p30=nan_wmean("margin_p30"),
+        cluster_concentration=nan_wmean("cluster_concentration"),
         thresholds=reports[0].thresholds,
     )

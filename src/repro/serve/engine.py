@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import DEFAULT_TENANT, ObsHub, Ring, Span, TenantLedger
+from repro.obs.quality import ShadowSampler
 from repro.plan import resolve_plan, trace
 from repro.plan.plan import PlanContext, QueryPlan
 
@@ -124,6 +125,16 @@ class QueryEngine:
     at submit (status ``"rejected"``, -1/-inf results, accounted to the
     tenant) and never reach the batch queue, so one tenant's overload
     cannot starve another's window.
+
+    Shadow lane (DESIGN.md §14): ``shadow=True`` (or a config dict /
+    prebuilt :class:`~repro.obs.quality.ShadowSampler`) re-answers a
+    deterministic ~1/``rate`` of live queries as exact float32 brute
+    force.  Sampled rows are *offered* at result-scatter time (a copy,
+    nothing more) and *drained* only after every live request of the
+    window is delivered and accounted — the shadow lane never passes
+    admission, never charges a token bucket, and never delays a live
+    result.  Drained recall@k feeds the tenant ledger's recall-SLO
+    windows (:meth:`set_quota` ``recall_slo=``).
     """
 
     def __init__(
@@ -137,6 +148,7 @@ class QueryEngine:
         ewma_alpha: float = 0.3,
         latency_window: int = DEFAULT_LATENCY_WINDOW,
         obs: ObsHub | bool | None = None,
+        shadow: ShadowSampler | dict | bool | None = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         self.index = index
@@ -163,6 +175,19 @@ class QueryEngine:
             latency_window=latency_window,
             clock=clock,
         )
+        if not shadow:
+            self.shadow = None
+        elif isinstance(shadow, ShadowSampler):
+            self.shadow = shadow
+            self.shadow.ledger = self.tenants
+        else:
+            kw = dict(shadow) if isinstance(shadow, dict) else {}
+            kw.setdefault("k", default_k)
+            self.shadow = ShadowSampler(
+                index,
+                registry=self.obs.registry if self.obs else None,
+                ledger=self.tenants, **kw,
+            )
         if self.obs is not None:
             reg = self.obs.registry
             self._m_requests = reg.counter(
@@ -193,12 +218,21 @@ class QueryEngine:
     # -- admission ---------------------------------------------------------
 
     def set_quota(self, tenant: str, qps: float,
-                  burst: float | None = None) -> None:
+                  burst: float | None = None,
+                  recall_slo: float | None = None) -> None:
         """Arm a token-bucket admission quota (queries/second with
         ``burst`` headroom) for ``tenant``.  Requests beyond the budget
         are rejected at submit; other tenants are unaffected (each
-        bucket is independent)."""
-        self.tenants.set_quota(tenant, qps, burst=burst)
+        bucket is independent).
+
+        ``recall_slo`` adds the quality dimension: the tenant's rolling
+        shadow-recall p50 must stay at or above it.  Breaches are
+        edge-triggered events the ledger's subscribers (the remediation
+        policy) receive — they never reject traffic.  Needs the shadow
+        lane armed (``shadow=`` at construction) to get measurements.
+        """
+        self.tenants.set_quota(tenant, qps, burst=burst,
+                               recall_slo=recall_slo)
 
     def submit(
         self,
@@ -362,6 +396,16 @@ class QueryEngine:
                 self._results[t.id] = (ids[row:row + nq],
                                        scores[row:row + nq])
                 row += nq
+                if self.shadow is not None:
+                    # offer only: a copy of the sampled rows; ground
+                    # truth runs after the whole window is accounted
+                    stage = ("degraded" if t.degraded
+                             else "adaptive" if plan.adaptive
+                             else "base")
+                    self.shadow.offer(
+                        t.queries, self._results[t.id][0],
+                        tenant=t.tenant, nav=plan.nav, stage=stage,
+                    )
                 t.status = "done"
                 t.latency = t_done - t.submitted
                 self.stats.done += 1
@@ -388,6 +432,16 @@ class QueryEngine:
                 attrs={"requests": len(admitted),
                        "batches": len(launches)},
             ))
+        # shadow drain: every live result above is already delivered and
+        # its latency recorded — the exact brute force happens strictly
+        # off the serving path and outside tenant accounting
+        if self.shadow is not None and self.shadow.pending:
+            if tracer is not None:
+                with tracer.span("shadow", 0,
+                                 pending=len(self.shadow.pending)):
+                    self.shadow.drain()
+            else:
+                self.shadow.drain()
         return completed
 
     def _finish_dropped(self, t: QueryTicket) -> None:
@@ -448,6 +502,26 @@ class QueryEngine:
         ladder bucket with every other singleton."""
         return self.result(self.submit(queries, **kwargs))
 
+    # -- index lifecycle ---------------------------------------------------
+
+    def swap_index(self, index, *, warmup: bool = False) -> None:
+        """Re-point the engine at a new index snapshot.
+
+        Streaming serves swap in ``freeze()`` snapshots at consolidation
+        or phase boundaries; the engine re-wires plan-cache telemetry
+        and the shadow sampler's ground-truth tier to the new index.
+        Plan latency EWMAs carry over (plan keys are index-independent
+        and the new snapshot serves comparable shapes).
+        """
+        self.index = index
+        if self.obs is not None and hasattr(index, "plans"):
+            index.plans.obs = self.obs
+        if self.shadow is not None:
+            self.shadow.index = index
+            index.shadow = self.shadow
+        if warmup:
+            self.warmup()
+
     # -- warmup & reporting ------------------------------------------------
 
     def warmup(
@@ -499,6 +573,8 @@ class QueryEngine:
             "p99_ms": (lat.percentile(99) * 1e3) if len(lat) else None,
         }
         out["tenant_report"] = self.tenants.report()
+        if self.shadow is not None:
+            out["shadow_report"] = self.shadow.report()
         if self.obs is not None:
             out["span_report"] = self.obs.tracer.report()
         out.update(

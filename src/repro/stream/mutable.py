@@ -437,6 +437,50 @@ class MutableQuIVerIndex:
         monitor.check()                     # establish the current band
         return monitor
 
+    def replan(
+        self,
+        *,
+        nav: str,
+        ef_scale: int | None = None,
+        adaptive: bool | None = None,
+        source: str = "replan",
+    ) -> NavPolicy:
+        """Switch the live index's default nav at serve time (the
+        remediation path, DESIGN.md §14).  Same contract as
+        ``QuIVerIndex.replan`` except ``nav="ivf"`` is rejected for the
+        same reason ``search(nav="ivf")`` is: coarse partitions go
+        stale under churn — freeze() first.
+
+        A mutable index resolves its default nav from ``metric_kind``
+        (the policy carries only the ef/escalation schedule), so both
+        are updated together.
+        """
+        if nav == "ivf":
+            raise ValueError(
+                "replan(nav='ivf') is not available on a mutable index "
+                "(partitions go stale under churn); freeze() first"
+            )
+        if nav == "float32" and self.vectors is None:
+            raise ValueError(
+                "replan(nav='float32') needs the cold vector tier; "
+                "this index is vector-free"
+            )
+        if self.policy is not None:
+            kw = {"nav": nav, "source": source}
+            if ef_scale is not None:
+                kw["ef_scale"] = int(ef_scale)
+            if adaptive is not None:
+                kw["adaptive"] = bool(adaptive)
+            self.policy = dataclasses.replace(self.policy, **kw)
+        else:
+            self.policy = NavPolicy(
+                nav=nav, source=source,
+                **({} if ef_scale is None else {"ef_scale": int(ef_scale)}),
+                **({} if adaptive is None else {"adaptive": bool(adaptive)}),
+            )
+        self.metric_kind = nav
+        return self.policy
+
     def _note_mutation(self, kind: str, count: int):
         """Mutation telemetry + drift re-score (one owner: insert,
         delete and consolidate all funnel through here)."""
@@ -478,6 +522,8 @@ class MutableQuIVerIndex:
             self.labels.memory_bytes() if self.labels is not None else 0
         )
         cold = self.vectors.size * 4 if self.vectors is not None else 0
+        shadow = getattr(self, "shadow", None)
+        shadow_bytes = shadow.memory_bytes() if shadow is not None else 0
         hot = sig_bytes + adj_bytes + mask_bytes + label_bytes
         out = {
             "hot_signature_bytes": int(sig_bytes),
@@ -486,7 +532,8 @@ class MutableQuIVerIndex:
             "hot_label_bytes": int(label_bytes),
             "hot_total_bytes": int(hot),
             "cold_vector_bytes": int(cold),
-            "total_bytes": int(hot + cold),
+            "host_shadow_bytes": int(shadow_bytes),
+            "total_bytes": int(hot + cold + shadow_bytes),
         }
         if self.policy is not None:
             out["nav_policy"] = self.policy.describe()

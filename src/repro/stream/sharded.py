@@ -181,6 +181,15 @@ class StreamingShardedIndex:
             for i, s in enumerate(self.shards)
         ]
 
+    def replan(self, *, nav: str, **replan_kw) -> list:
+        """Fan a nav replan out to every shard (DESIGN.md §14): each
+        shard's default nav + schedule flips together, so the fleet
+        serves one consistent policy.  Returns the per-shard policies
+        in shard order; same validation as ``MutableQuIVerIndex.replan``
+        (``nav="ivf"`` rejected — the routing tier is a scatter overlay,
+        not a per-shard nav family)."""
+        return [s.replan(nav=nav, **replan_kw) for s in self.shards]
+
     # -- applicability probe (DESIGN.md §10) -------------------------------
 
     def probe_report(self, **probe_kw) -> CompatibilityReport:

@@ -121,6 +121,47 @@ def test_jsonl_sink_and_hub_emit(tmp_path):
     assert records[0]["metrics"]["n"][""] == 5
 
 
+def test_jsonl_sink_rotates_on_size(tmp_path):
+    path = tmp_path / "obs.jsonl"
+    # each record is ~40 bytes; cap at ~2 records per generation
+    sink = JsonlSink(path, max_bytes=90, keep=2)
+    for i in range(7):
+        sink.emit({"seq": i, "pad": "x" * 16})
+    sink.close()
+
+    def lines(p):
+        return [json.loads(ln) for ln in p.read_text().splitlines()]
+
+    live = lines(path)
+    gen1 = lines(path.with_name("obs.jsonl.1"))
+    gen2 = lines(path.with_name("obs.jsonl.2"))
+    # keep=2: no third generation, oldest records dropped
+    assert not path.with_name("obs.jsonl.3").exists()
+    # every line lands whole in exactly one generation, newest in path
+    assert live and live[-1]["seq"] == 6
+    seqs = [r["seq"] for r in gen2 + gen1 + live]
+    assert seqs == sorted(seqs)                  # oldest -> newest order
+    assert len(live) + len(gen1) + len(gen2) < 7  # something rotated out
+    # generations respect the size cap
+    for p in (path.with_name("obs.jsonl.1"), path.with_name("obs.jsonl.2")):
+        assert p.stat().st_size <= 90
+
+
+def test_jsonl_sink_rotation_disabled_by_default(tmp_path):
+    path = tmp_path / "obs.jsonl"
+    sink = JsonlSink(path)                       # max_bytes=0: unbounded
+    for i in range(50):
+        sink.emit({"seq": i})
+    sink.close()
+    assert len(path.read_text().splitlines()) == 50
+    assert not path.with_name("obs.jsonl.1").exists()
+
+
+def test_jsonl_sink_rejects_bad_keep(tmp_path):
+    with pytest.raises(ValueError):
+        JsonlSink(tmp_path / "x.jsonl", max_bytes=10, keep=0)
+
+
 def test_tracer_spans_feed_stage_histogram():
     reg = MetricsRegistry()
     tr = Tracer(reg)

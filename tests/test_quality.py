@@ -1,0 +1,347 @@
+"""Shadow ground-truth sampling + closed-loop remediation tests
+(DESIGN.md §14): deterministic sampling, recall-estimate fidelity,
+recall-SLO edge triggering, targeted replan invalidation, and the
+remediation ladder's ordering."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.index import QuIVerIndex
+from repro.core.vamana import BuildParams
+from repro.data.datasets import make_dataset
+from repro.obs import (
+    MetricsRegistry,
+    RemediationPolicy,
+    ShadowSampler,
+    TenantLedger,
+    shadow_hash,
+    should_sample,
+)
+from repro.plan import trace
+from repro.probe import probe_corpus
+from repro.serve.engine import QueryEngine
+from repro.stream.mutable import MutableQuIVerIndex
+
+jax.config.update("jax_platform_name", "cpu")
+
+PARAMS = BuildParams(m=6, ef_construction=32, prune_pool=32, chunk=128)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@functools.lru_cache(maxsize=1)
+def _index():
+    base, queries = make_dataset("minilm-surrogate", n=800, queries=32)
+    idx = QuIVerIndex.build(jnp.asarray(base), PARAMS)
+    return idx, np.asarray(queries, np.float32)
+
+
+def _fresh_index(n=400, queries=8):
+    base, qs = make_dataset("minilm-surrogate", n=n, queries=queries)
+    return (QuIVerIndex.build(jnp.asarray(base), PARAMS),
+            np.asarray(qs, np.float32))
+
+
+def _red_report():
+    """A sampled probe of a sign-collapsed corpus: red verdict."""
+    rng = np.random.default_rng(7)
+    bad = np.abs(rng.normal(size=(400, 32))).astype(np.float32) + 3.0
+    return probe_corpus(jnp.asarray(bad), sample=400)
+
+
+# -- deterministic sampling -------------------------------------------------
+
+
+def test_should_sample_is_deterministic_and_stateless():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(32,)).astype(np.float32)
+    first = should_sample(q, 16)
+    assert all(should_sample(q, 16) == first for _ in range(5))
+    # the decision is a pure function of the bytes, not the object
+    assert should_sample(q.copy(), 16) == first
+    assert shadow_hash(q) == shadow_hash(q.copy())
+    assert should_sample(q, 1)           # rate<=1: everything sampled
+
+
+def test_sampling_rate_is_roughly_honoured():
+    rng = np.random.default_rng(1)
+    qs = rng.normal(size=(4096, 16)).astype(np.float32)
+    frac = np.mean([should_sample(q, 16) for q in qs])
+    assert 1 / 32 < frac < 1 / 8         # ~1/16, crc32 is uniform enough
+
+
+# -- recall-estimate fidelity ----------------------------------------------
+
+
+def test_shadow_recall_matches_exact_recall_of_served_results():
+    from repro.core.baselines import flat_search
+
+    idx, queries = _index()
+    engine = QueryEngine(idx, shadow={"rate": 1}, default_ef=64)
+    tickets = [engine.submit(queries[i:i + 4]) for i in range(0, 32, 4)]
+    while any(engine.poll(t) is None for t in tickets):
+        engine.pump()
+    # recompute what the shadow lane should have measured
+    served = np.concatenate([engine.poll(t)[0] for t in tickets])
+    exact, _ = flat_search(idx.vectors, queries, k=10)
+    manual = np.mean([
+        len(set(s.tolist()) & set(e.tolist())) / 10
+        for s, e in zip(served, np.asarray(exact))
+    ])
+    rep = engine.shadow.report()
+    assert rep["seen"] == rep["sampled"] == rep["drained"] == 32
+    assert rep["pending"] == 0           # pump drains after the window
+    assert rep["recall_mean"] == pytest.approx(manual, abs=1e-4)
+    # the fixture is a green corpus: the estimate should be high, and
+    # within the ±3pt tolerance of the exact value by construction
+    assert rep["recall_mean"] > 0.8
+
+
+def test_shadow_lane_never_charges_tenant_buckets():
+    idx, queries = _index()
+    clk = FakeClock()
+    engine = QueryEngine(idx, shadow={"rate": 1}, clock=clk)
+    engine.set_quota("t0", qps=1.0)      # burst 2: third submit rejects
+    tickets = [engine.submit(queries[i], tenant="t0") for i in range(3)]
+    while any(engine.poll(t) is None for t in tickets):
+        engine.pump()
+    acct = engine.tenants.report()["tenants"]["t0"]
+    assert acct["admitted"] == 2 and acct["rejected"] == 1
+    # only *served* queries reach the shadow lane, and draining their
+    # ground truth consumed no admission tokens
+    assert engine.shadow.seen == 2
+    assert engine.shadow.drained == 2
+
+
+def test_shadow_sampler_requires_cold_vectors():
+    idx, _ = _index()
+    bare = QuIVerIndex(
+        sigs=idx.sigs, adjacency=idx.adjacency, medoid=idx.medoid,
+        params=idx.params, vectors=None,
+    )
+    with pytest.raises(ValueError, match="vector-free"):
+        ShadowSampler(bare)
+
+
+def test_memory_breakdown_accounts_shadow_state():
+    idx, queries = _fresh_index()
+    assert idx.memory_breakdown()["host_shadow_bytes"] == 0
+    sampler = ShadowSampler(idx, rate=1, registry=MetricsRegistry())
+    ids = np.zeros((len(queries), 10), np.int32)
+    sampler.offer(queries, ids)
+    mem = idx.memory_breakdown()
+    assert mem["host_shadow_bytes"] == sampler.memory_bytes()
+    assert mem["host_shadow_bytes"] > 0
+    assert mem["total_bytes"] >= mem["hot_total_bytes"] + \
+        mem["cold_vector_bytes"] + mem["host_shadow_bytes"]
+
+
+# -- recall-SLO accounting --------------------------------------------------
+
+
+def test_recall_slo_breach_is_edge_triggered():
+    clk = FakeClock()
+    ledger = TenantLedger(registry=MetricsRegistry(), clock=clk,
+                          recall_min_samples=4)
+    ledger.set_quota("t", qps=100.0, recall_slo=0.9)
+    events = []
+    ledger.subscribe(events.append)
+    # below min_samples: no verdict yet
+    for _ in range(3):
+        assert not ledger.observe_recall("t", 0.2)
+    assert not events
+    # window p50 drops below the SLO: exactly one breach event
+    assert ledger.observe_recall("t", 0.2)
+    assert len(events) == 1
+    assert events[0]["kind"] == "recall_slo" and events[0]["tenant"] == "t"
+    for _ in range(8):                   # still breached: no re-fire
+        ledger.observe_recall("t", 0.1)
+    assert len(events) == 1
+    # recovery clears the flag silently...
+    for _ in range(32):
+        ledger.observe_recall("t", 1.0)
+    assert not ledger.recall_breached("t")
+    assert len(events) == 1
+    # ...so the next degradation alarms again
+    for _ in range(32):
+        ledger.observe_recall("t", 0.0)
+    assert len(events) == 2
+
+
+def test_recall_slo_ignored_without_quota():
+    ledger = TenantLedger(registry=MetricsRegistry(),
+                          recall_min_samples=2)
+    for _ in range(8):
+        assert not ledger.observe_recall("anon", 0.0)
+    assert not ledger.recall_breached("anon")
+
+
+# -- targeted replan invalidation ------------------------------------------
+
+
+def test_replan_switches_default_nav_and_keeps_unrelated_plans():
+    idx, queries = _fresh_index()
+    # compile two plan families: the bq2 default and a forced-float32
+    idx.search(jnp.asarray(queries), k=5, ef=32)
+    idx.search(jnp.asarray(queries), k=5, ef=32, nav="float32")
+    forced = [p for p in idx.plans._programs if p.nav == "float32"]
+    survivors = {p: idx.plans._programs[p] for p in forced}
+    policy = idx.replan(nav="float32")
+    assert policy.nav == "float32" and policy.source == "replan"
+    rep = idx.plans.report()
+    assert rep["invalidated_plans"] >= 1          # the old bq2 family
+    assert all(p.nav != "bq2" for p in idx.plans._programs)
+    # unrelated (float32) executables survive by identity: re-running
+    # them is retrace-free
+    for p, prog in survivors.items():
+        assert idx.plans._programs[p] is prog
+    with trace.assert_no_retrace(idx.plans.trace_prefix(),
+                                 "forced-nav plans survive a replan"):
+        idx.search(jnp.asarray(queries), k=5, ef=32, nav="float32")
+    assert idx.plans.report()["retraces"] == 0
+    # default traffic now navigates the new family
+    ids_default, _ = idx.search(jnp.asarray(queries), k=5, ef=32)
+    ids_forced, _ = idx.search(jnp.asarray(queries), k=5, ef=32,
+                               nav="float32")
+    np.testing.assert_array_equal(np.asarray(ids_default),
+                                  np.asarray(ids_forced))
+
+
+def test_replan_validates_tier_requirements():
+    idx, _ = _fresh_index()
+    with pytest.raises(ValueError, match="partition"):
+        idx.replan(nav="ivf")
+    bare = QuIVerIndex(
+        sigs=idx.sigs, adjacency=idx.adjacency, medoid=idx.medoid,
+        params=idx.params, vectors=None,
+    )
+    with pytest.raises(ValueError, match="vector"):
+        bare.replan(nav="float32")
+
+
+def test_mutable_replan_flips_serving_metric():
+    rng = np.random.default_rng(0)
+    idx = MutableQuIVerIndex.empty(32, 256, PARAMS)
+    idx.insert(rng.normal(size=(128, 32)).astype(np.float32))
+    with pytest.raises(ValueError, match="stale"):
+        idx.replan(nav="ivf")
+    policy = idx.replan(nav="float32", source="remediation")
+    assert policy.nav == "float32"
+    assert idx.metric_kind == "float32"  # mutable default nav follows
+    ids, scores = idx.search(rng.normal(size=(4, 32)).astype(np.float32),
+                             k=5)
+    assert np.asarray(ids).shape == (4, 5)
+
+
+# -- the remediation ladder -------------------------------------------------
+
+
+def test_remediation_ladder_walks_in_order():
+    idx, queries = _fresh_index()
+    engine = QueryEngine(idx, default_ef=64)
+    red = _red_report()
+    policy = RemediationPolicy(engine, probe_source=lambda: red,
+                               auto=False, ef_cap=2.0,
+                               registry=MetricsRegistry())
+    trigger = {"kind": "recall_slo", "tenant": "t0"}
+    # rung 2: the red re-probe wants the float32 ladder -> replan
+    ev1 = policy.step(trigger)
+    assert ev1["action"] == "replan"
+    assert policy._current_nav() == "float32"
+    # rung 3: nav already right -> spend ef (doubled, capped)
+    ev2 = policy.step(trigger)
+    assert ev2["action"] == "escalate_ef"
+    assert engine.default_ef == 128
+    # rung 4: ef capped -> red flag
+    ev3 = policy.step(trigger)
+    assert ev3["action"] == "flag_red"
+    assert policy.flagged_red
+    # ladder exhausted: further triggers are no-ops
+    ev4 = policy.step(trigger)
+    assert ev4["note"] == "already red-flagged"
+    counts = policy.report()["actions"]
+    assert counts["replan"] == 1 and counts["escalate_ef"] == 1
+    # every rung re-probed first (except the exhausted no-op)
+    assert counts["reprobe"] == 3
+    # resolve() re-arms the ladder and restores the ef budget
+    policy.resolve()
+    assert not policy.flagged_red and engine.default_ef == 64
+
+
+def test_remediation_green_reprobe_is_false_alarm():
+    idx, _ = _fresh_index()
+    engine = QueryEngine(idx, default_ef=64)
+    green = probe_corpus(idx.vectors, sample=400)
+    assert green.verdict == "green"
+    policy = RemediationPolicy(engine, probe_source=lambda: green,
+                               auto=False, registry=MetricsRegistry())
+    ev = policy.step({"kind": "drift", "tenant": "t0", "band": "amber"})
+    assert ev["action"] == "reprobe" and ev["note"] == "false alarm"
+    assert policy._current_nav() == "bq2"         # no serving change
+    assert engine.default_ef == 64
+
+
+def test_remediation_auto_fires_on_drift_alarm():
+    rng = np.random.default_rng(0)
+    idx = MutableQuIVerIndex.empty(32, 2048, PARAMS)
+    good = idx.insert(rng.normal(size=(128, 32)).astype(np.float32))
+    monitor = idx.attach_drift_monitor(tenant="t", min_n=32,
+                                       registry=MetricsRegistry())
+
+    class Engine:                        # minimal engine surface
+        def __init__(self, index):
+            self.index = index
+            self.default_ef = 64
+            self.tenants = TenantLedger(registry=MetricsRegistry())
+            self.obs = None
+
+    policy = RemediationPolicy(Engine(idx), auto=True,
+                               registry=MetricsRegistry()).attach(monitor)
+    bad = np.abs(rng.normal(size=(512, 32))).astype(np.float32) + 3.0
+    idx.insert(bad)
+    idx.delete(good)                     # live set crosses to red
+    # the alarm fired mid-mutation and the policy acted immediately:
+    # live re-probe is red, so the default nav left bq2
+    assert policy.action_counts["replan"] == 1
+    assert idx.metric_kind == "float32"
+    assert policy.last_report.verdict == "red"
+
+
+def test_remediation_check_coalesces_queued_triggers():
+    idx, _ = _fresh_index()
+    engine = QueryEngine(idx, default_ef=64)
+    red = _red_report()
+    policy = RemediationPolicy(engine, probe_source=lambda: red,
+                               auto=False, registry=MetricsRegistry())
+    for _ in range(5):                   # correlated alarms, one episode
+        policy._trigger({"kind": "recall_slo", "tenant": "t"})
+    ev = policy.check()
+    assert ev["action"] == "replan"
+    assert policy.report()["pending_triggers"] == 0
+    assert policy.check() is None        # nothing queued
+
+
+# -- engine lifecycle -------------------------------------------------------
+
+
+def test_swap_index_rewires_shadow_ground_truth():
+    idx, queries = _index()
+    engine = QueryEngine(idx, shadow={"rate": 1})
+    new_idx, _ = _fresh_index()
+    engine.swap_index(new_idx)
+    assert engine.shadow.index is new_idx
+    assert new_idx.shadow is engine.shadow
+    t = engine.submit(queries[:2])
+    while engine.poll(t) is None:
+        engine.pump()
+    assert engine.shadow.drained == 2    # GT ran against the new tier
