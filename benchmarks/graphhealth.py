@@ -1,0 +1,247 @@
+"""Graph X-ray benchmark: churn-to-collapse early warning + probe cost
++ nav-tracing tax (DESIGN.md §15).
+
+The claim the X-ray has to earn: **structural health degrades before
+shadow recall does**.  Shadow sampling (§14) tells you recall already
+cratered; the topology probes are supposed to fire while the damage is
+still building.  The scenario:
+
+* **build + probe cost** — build the green snapshot, then time the full
+  probe suite (structure + BFS + edge agreement) cold (with compiles)
+  and warm.  The warm suite — the operational per-cycle cadence — must
+  cost < ``PROBE_PCT`` of the build it is guarding.
+* **churn-to-collapse** — an embedding-model rollover applied in
+  slices: each cycle replaces a tranche of the contrastive corpus with
+  SIFT-style non-negative rows (the paper's Finding-1 sign-collapse),
+  X-rays the streaming graph, lets the operator-paced
+  :class:`~repro.obs.RemediationPolicy` act on any band crossing, then
+  swaps the frozen snapshot under a shadow-sampled engine and serves.
+  The gate: the health band leaves green at least one cycle before the
+  tenant's recall SLO breaches — amber while recall is still inside
+  SLO is exactly the early warning §15 promises.
+* **nav-tracing tax** — paired engines over the identical green
+  snapshot and workload: obs-armed (per-query nav counters transferred
+  + histogrammed) vs obs-off (counters ride the compiled program but
+  never leave device).  Gate is a QPS ratio (never wall-clock — the CI
+  runner is a 1-core box) plus zero steady-state retraces.
+
+Knobs (all env):
+
+* ``REPRO_GRAPHHEALTH_CYCLES`` (6) — rollover tranches;
+* ``REPRO_GRAPHHEALTH_ROUNDS`` (4) — serving rounds per cycle;
+* ``REPRO_GRAPHHEALTH_SAMPLE`` (128) — edge-agreement sample rows;
+* ``REPRO_GRAPHHEALTH_ASSERT`` (0) — enable the CI smoke gates;
+* ``REPRO_GRAPHHEALTH_PROBE_PCT`` (5.0) — warm probe suite as % of
+  build wall;
+* ``REPRO_GRAPHHEALTH_NAV_OVERHEAD_PCT`` (5.0) — nav-tracing QPS tax;
+* ``REPRO_GRAPHHEALTH_SLO`` (0.80) — the tenant recall SLO.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_Q, dataset
+from repro.core.baselines import flat_search
+from repro.core.vamana import BuildParams
+from repro.data.datasets import euclidean_cv_surrogate
+from repro.obs import GraphHealthMonitor, RemediationPolicy
+from repro.plan import trace
+from repro.serve.engine import QueryEngine
+from repro.stream.mutable import MutableQuIVerIndex
+
+CYCLES = int(os.environ.get("REPRO_GRAPHHEALTH_CYCLES", 6))
+ROUNDS = int(os.environ.get("REPRO_GRAPHHEALTH_ROUNDS", 4))
+SAMPLE = int(os.environ.get("REPRO_GRAPHHEALTH_SAMPLE", 128))
+ASSERT = os.environ.get("REPRO_GRAPHHEALTH_ASSERT", "0") == "1"
+PROBE_PCT = float(os.environ.get("REPRO_GRAPHHEALTH_PROBE_PCT", 5.0))
+NAV_OVERHEAD_PCT = float(
+    os.environ.get("REPRO_GRAPHHEALTH_NAV_OVERHEAD_PCT", 5.0))
+RECALL_SLO = float(os.environ.get("REPRO_GRAPHHEALTH_SLO", 0.80))
+
+DATASET = "minilm-surrogate"
+TENANT = "prod"
+EF = 64
+K = 10
+BANDS = ("green", "amber", "red")
+
+PARAMS = BuildParams(m=12, ef_construction=64, prune_pool=64, chunk=256)
+
+
+def _serve_rounds(engine, queries, rounds, *, tenant=TENANT):
+    nq, t0, served = 0, time.perf_counter(), None
+    for _ in range(rounds):
+        tickets = [
+            engine.submit(queries[i:i + 8], tenant=tenant)
+            for i in range(0, len(queries), 8)
+        ]
+        engine.pump()
+        served = np.concatenate(
+            [engine.result(t)[0] for t in tickets]
+        )
+        nq += len(queries)
+    return nq, time.perf_counter() - t0, served
+
+
+def _probe(churn, **kw):
+    t0 = time.perf_counter()
+    rep = churn.graph_report(sample=SAMPLE, **kw)
+    return rep, time.perf_counter() - t0
+
+
+def run():
+    base, queries = dataset(DATASET)
+    base = np.asarray(base, dtype=np.float32)
+    queries = np.asarray(queries, dtype=np.float32)[:BENCH_Q]
+    dim = base.shape[1]
+    rows = []
+
+    # -- build + probe cost -------------------------------------------------
+    t0 = time.perf_counter()
+    churn = MutableQuIVerIndex.build(
+        base, PARAMS, capacity=3 * len(base))
+    build_s = time.perf_counter() - t0
+    rep0, probe_cold_s = _probe(churn)      # includes the jit compiles
+    _, probe_warm_s = _probe(churn)         # the operational cadence
+    probe_pct = probe_warm_s / build_s * 100.0
+    rows.append({
+        "name": "graphhealth_build_probe",
+        "build_s": round(build_s, 2),
+        "probe_cold_s": round(probe_cold_s, 3),
+        "probe_warm_s": round(probe_warm_s, 3),
+        "probe_pct_of_build": round(probe_pct, 2),
+        "verdict": rep0.verdict,
+        "health_score": rep0.health_score,
+        "edge_agreement": round(rep0.edge_agreement, 4),
+    })
+
+    # -- churn-to-collapse: amber must lead the SLO breach ------------------
+    monitor = GraphHealthMonitor(tenant=TENANT)
+    monitor.check(rep0)                     # arm on the green baseline
+    engine = QueryEngine(churn.freeze(), default_k=K, default_ef=EF,
+                         shadow={"rate": 1})
+    engine.tenants.recall_window = 32
+    engine.tenants.recall_min_samples = 8
+    engine.set_quota(TENANT, qps=1e9, recall_slo=RECALL_SLO)
+    policy = RemediationPolicy(engine, auto=False)
+    policy.attach_graph(monitor)
+    engine.warmup(buckets=(8,))
+
+    # the rollover corpus: Finding-1 sign-collapse rows, sliced into
+    # per-cycle tranches replacing the original contrastive rows
+    bad = euclidean_cv_surrogate(len(base), d=dim)
+    green_ids = np.nonzero(np.asarray(churn.live))[0]
+    tranche = -(-len(base) // CYCLES)       # ceil: all rolled by the end
+
+    amber_cycle = breach_cycle = None
+    for cycle in range(1, CYCLES + 1):
+        lo, hi = (cycle - 1) * tranche, min(cycle * tranche, len(base))
+        if lo < hi:
+            churn.insert(bad[lo:hi])
+            churn.delete(green_ids[lo:hi])
+        rep, probe_s = _probe(churn)
+        monitor.check(rep)
+        act = policy.check()                # operator-paced ladder step
+        engine.swap_index(churn.freeze())
+        nq, wall, served = _serve_rounds(engine, queries, ROUNDS)
+        window = engine.tenants.stats(TENANT).recalls
+        shadow_recall = (
+            float(window.array().mean()) if len(window) else float("nan")
+        )
+        breached = engine.tenants.recall_breached(TENANT)
+        if amber_cycle is None and rep.verdict != "green":
+            amber_cycle = cycle
+        if breach_cycle is None and breached:
+            breach_cycle = cycle
+        rows.append({
+            "name": f"graphhealth_cycle{cycle}",
+            "us_per_call": wall / nq * 1e6,
+            "rolled_frac": round(hi / len(base), 2),
+            "health_score": rep.health_score,
+            "band": rep.verdict,
+            "worst_stat": rep.worst_stat()[0],
+            "edge_agreement": round(rep.edge_agreement, 4),
+            "tombstones": round(rep.tombstone_density, 3),
+            "probe_s": round(probe_s, 3),
+            "action": act["action"] if act else None,
+            "shadow_recall": round(shadow_recall, 4),
+            "slo_breached": breached,
+        })
+
+    lead = (
+        breach_cycle - amber_cycle
+        if amber_cycle is not None and breach_cycle is not None else None
+    )
+    rows.append({
+        "name": "graphhealth_early_warning",
+        "amber_cycle": amber_cycle,
+        "breach_cycle": breach_cycle,
+        "lead_cycles": lead,
+        "final_band": monitor.band,
+        "alarms": len(monitor.alarms),
+        "actions": dict(policy.action_counts),
+    })
+
+    # -- nav-tracing tax: paired obs-on / obs-off engines -------------------
+    snap = MutableQuIVerIndex.build(
+        base, PARAMS, capacity=len(base) + 1).freeze()
+    traced = QueryEngine(snap, default_k=K, default_ef=EF)   # obs armed
+    bare = QueryEngine(snap, default_k=K, default_ef=EF, obs=False)
+    traced.warmup(buckets=(8,))
+    bare.warmup(buckets=(8,))
+    _serve_rounds(traced, queries, 2)
+    _serve_rounds(bare, queries, 2)
+    with trace.assert_no_retrace(what="nav-traced steady state"):
+        nq_t, wall_t, _ = _serve_rounds(traced, queries, ROUNDS)
+    nq_b, wall_b, _ = _serve_rounds(bare, queries, ROUNDS)
+    qps_traced, qps_bare = nq_t / wall_t, nq_b / wall_b
+    nav_overhead_pct = (qps_bare - qps_traced) / qps_bare * 100.0
+    nav = engine.tenants.report()["tenants"][TENANT]["nav"]
+    rows.append({
+        "name": "graphhealth_nav_overhead",
+        "qps_traced": round(qps_traced, 1),
+        "qps_bare": round(qps_bare, 1),
+        "overhead_pct": round(nav_overhead_pct, 2),
+        "hops_p50": nav.get("hops", {}).get("p50"),
+        "evals_p50": nav.get("evals", {}).get("p50"),
+    })
+
+    if ASSERT:
+        assert rep0.verdict == "green", (
+            f"green baseline read {rep0.verdict}: {rep0.summary()}"
+        )
+        assert probe_pct < PROBE_PCT, (
+            f"warm probe suite {probe_pct:.2f}% of build > {PROBE_PCT}%"
+        )
+        assert amber_cycle is not None, "health never left green"
+        assert breach_cycle is not None, (
+            "recall SLO never breached: the collapse scenario is broken"
+        )
+        assert amber_cycle < breach_cycle, (
+            f"no early warning: amber at cycle {amber_cycle}, SLO "
+            f"breach at cycle {breach_cycle}"
+        )
+        assert monitor.band == "red", (
+            f"full sign-collapse rollover should X-ray red, got "
+            f"{monitor.band}"
+        )
+        assert sum(policy.action_counts.values()) >= 1, (
+            "band crossings never reached the remediation ladder"
+        )
+        assert nav_overhead_pct <= NAV_OVERHEAD_PCT, (
+            f"nav-tracing tax {nav_overhead_pct:.1f}% > "
+            f"{NAV_OVERHEAD_PCT}% QPS"
+        )
+        assert nav.get("hops", {}).get("p50", 0) > 0, (
+            "nav counters never reached the tenant ledger"
+        )
+
+    extra = {
+        "graph_monitor": monitor.report(),
+        "remediation": policy.report(),
+        "slo": RECALL_SLO,
+    }
+    return rows, extra

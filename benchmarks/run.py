@@ -20,6 +20,7 @@ from benchmarks import (
     ablation_bits,
     construction,
     filtered,
+    graphhealth,
     kernel_bench,
     multitenant,
     quality,
@@ -47,6 +48,7 @@ TABLES = {
     "serve": serve.run,
     "multitenant": multitenant.run,
     "quality": quality.run,
+    "graphhealth": graphhealth.run,
 }
 
 

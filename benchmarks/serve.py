@@ -141,7 +141,8 @@ def run() -> list[dict]:
     # optional Prometheus endpoint on REPRO_METRICS_PORT
     engine = QueryEngine(idx, default_k=K, default_ef=EF,
                          obs=ObsHub.from_env())
-    reporter, server = autostart(engine.obs, extra_fn=engine.stats_report)
+    reporter, server = autostart(engine.obs, extra_fn=engine.stats_report,
+                                 health_fn=engine.health_verdicts)
     # warm the closed plan set: unfiltered + filtered, singleton bucket
     # through the coalesced-round bucket
     buckets = (8, 32)

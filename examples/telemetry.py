@@ -25,6 +25,7 @@ from repro.obs import (
     ObsHub,
     PrometheusServer,
     RemediationPolicy,
+    health_snapshot,
 )
 from repro.serve.engine import QueryEngine
 from repro.stream.mutable import MutableQuIVerIndex
@@ -123,6 +124,21 @@ def main():
         print(f"remediation: action={fired['action']} "
               f"trigger={fired['trigger']} "
               f"nav now {policy._current_nav()}")
+
+    # 7. the graph X-ray (DESIGN.md §15): structural health before and
+    # after forced churn.  The contrastive build reads green; the
+    # stream that rolled its live set over to sign-collapsed rows
+    # reads degraded — the early warning fires from topology, before
+    # shadow recall has finished collecting evidence.  The same
+    # verdicts back GET /healthz (200 green / 503 red) so a load
+    # balancer can evict a structurally collapsed replica.
+    healthy = index.graph_report(sample=128)
+    print(f"green build X-ray:    {healthy.summary()}")
+    churned = stream.graph_report(sample=128)
+    print(f"drifted stream X-ray: {churned.summary()}")
+    drifted.swap_index(stream.freeze())    # snapshot carries the report
+    record, status = health_snapshot(drifted.health_verdicts)
+    print(f"GET /healthz -> {status}: {json.dumps(record)}")
 
     hub.close()
 

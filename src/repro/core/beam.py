@@ -153,6 +153,11 @@ class BeamResult(NamedTuple):
     dists: jnp.ndarray   # (ef,) float32, INF padded
     hops: jnp.ndarray    # () int32 — number of expansion rounds performed
     evals: jnp.ndarray   # () int32 — fresh distance evaluations performed
+    # navigation-path trace (DESIGN.md §15): live descent diagnostics
+    # carried out of the jitted loop for the quiver_nav_* histograms
+    descent: jnp.ndarray = jnp.float32(0.0)   # () entry dist - best nav dist
+    stalls: jnp.ndarray = jnp.int32(0)        # () rounds w/o beam-best gain
+    entry_rank: jnp.ndarray = jnp.int32(0)    # () nav dists beating entry
 
 
 def _conjoin(node_valid, result_valid):
@@ -261,10 +266,11 @@ def beam_search(
 
     def body(state):
         if masked:
-            ids, dists, expanded, res_ids, res_dists, visited, hops, \
-                evals = state
+            ids, dists, expanded, res_ids, res_dists, visited, stalls, \
+                hops, evals = state
         else:
-            ids, dists, expanded, visited, hops, evals = state
+            ids, dists, expanded, visited, stalls, hops, evals = state
+        prev_best = dists[0]
         frontier = (~expanded) & (ids >= 0)
         # stable sort => tie-break by beam position, matching argmin at L=1
         picks = jnp.argsort(jnp.where(frontier, dists, INF))[:expand]
@@ -292,6 +298,10 @@ def beam_search(
             ids, dists, expanded, new_ids, nd, ef
         )
         evals = evals + fresh.sum().astype(jnp.int32)
+        # a round that fails to improve the nav-beam best is a stall:
+        # the walk is circling (or backtracking through worse frontier
+        # entries) rather than descending — see DESIGN.md §15
+        stalls = stalls + (~(dists[0] < prev_best)).astype(jnp.int32)
         if masked:
             live = fresh & res_valid[nbrs_safe]
             res_ids, res_dists = _merge_results(
@@ -300,24 +310,34 @@ def beam_search(
                 jnp.where(live, nd, INF), ef,
             )
             return (ids, dists, expanded, res_ids, res_dists, visited,
-                    hops + 1, evals)
-        return ids, dists, expanded, visited, hops + 1, evals
+                    stalls, hops + 1, evals)
+        return ids, dists, expanded, visited, stalls, hops + 1, evals
 
     if masked:
         state = jax.lax.while_loop(
             cond, body,
             (ids, dists, expanded, res_ids, res_dists, visited,
-             jnp.int32(0), jnp.int32(1)),
+             jnp.int32(0), jnp.int32(0), jnp.int32(1)),
         )
-        _, _, _, res_ids, res_dists, _, hops, evals = state
-        return BeamResult(ids=res_ids, dists=res_dists, hops=hops,
-                          evals=evals)
+        _, nav_dists, _, res_ids, res_dists, _, stalls, hops, \
+            evals = state
+        return BeamResult(
+            ids=res_ids, dists=res_dists, hops=hops, evals=evals,
+            descent=d0 - nav_dists[0], stalls=stalls,
+            entry_rank=(nav_dists < d0).sum().astype(jnp.int32),
+        )
 
-    ids, dists, expanded, visited, hops, evals = jax.lax.while_loop(
-        cond, body,
-        (ids, dists, expanded, visited, jnp.int32(0), jnp.int32(1)),
+    ids, dists, expanded, visited, stalls, hops, evals = \
+        jax.lax.while_loop(
+            cond, body,
+            (ids, dists, expanded, visited, jnp.int32(0), jnp.int32(0),
+             jnp.int32(1)),
+        )
+    return BeamResult(
+        ids=ids, dists=dists, hops=hops, evals=evals,
+        descent=d0 - dists[0], stalls=stalls,
+        entry_rank=(dists < d0).sum().astype(jnp.int32),
     )
-    return BeamResult(ids=ids, dists=dists, hops=hops, evals=evals)
 
 
 def batched_beam_search(

@@ -127,6 +127,11 @@ class QuIVerIndex:
     # when built with ``ivf_candidates`` or attached via ``build_ivf``;
     # enables the ``nav="ivf"`` plan family and targeted scatter
     ivf: IVFPartition | None = None
+    # structural X-ray (repro.obs.graph, DESIGN.md §15): the last
+    # computed GraphHealthReport; persists through save/load (and
+    # freeze, on the streaming side) so a loaded index remembers the
+    # topology verdict it shipped with
+    graph_health: "object | None" = None
     # backends are constructed once per nav kind and cached: kernel
     # dispatch happens at construction, and beam-search jit caches key on
     # the backend instance, so reusing it avoids re-trace per query batch.
@@ -406,6 +411,42 @@ class QuIVerIndex:
         )
         return self.plans.run(plan, ctx, queries)
 
+    # -- structural health (graph X-ray, DESIGN.md §15) --------------------
+
+    def graph_report(
+        self,
+        *,
+        sample: int = 256,
+        agreement_k: int = 8,
+        max_hops: int = 64,
+        seed: int = 0,
+        thresholds=None,
+        registry=None,
+    ):
+        """Compute (and cache as ``graph_health``) the structural
+        :class:`~repro.obs.graph.GraphHealthReport`: degree structure,
+        reciprocity, medoid reachability, and — when cold vectors are
+        present — the sampled BQ↔float32 edge-agreement score.  The
+        cached report persists through :meth:`save`/:meth:`load`."""
+        from repro.obs.graph import (
+            DEFAULT_GRAPH_THRESHOLDS,
+            graph_health_report,
+        )
+        self.graph_health = graph_health_report(
+            self.adjacency,
+            medoid=self.medoid,
+            words=self.sigs.words if self.vectors is not None else None,
+            dim=self.sigs.dim,
+            vectors=self.vectors,
+            sample=sample,
+            agreement_k=agreement_k,
+            max_hops=max_hops,
+            seed=seed,
+            thresholds=thresholds or DEFAULT_GRAPH_THRESHOLDS,
+            registry=registry,
+        )
+        return self.graph_health
+
     # -- accounting (paper Table 2) -----------------------------------------
 
     def memory_breakdown(self) -> dict:
@@ -442,6 +483,11 @@ class QuIVerIndex:
             out["probe_verdict"] = (
                 self.report.verdict if self.report is not None else "n/a"
             )
+        if self.graph_health is not None:
+            out["graph_verdict"] = self.graph_health.verdict
+            out["graph_health_score"] = round(
+                self.graph_health.health_score, 4
+            )
         return out
 
     # -- persistence ---------------------------------------------------------
@@ -457,6 +503,8 @@ class QuIVerIndex:
             probe_fields.update(self.report.to_npz_fields())
         if self.ivf is not None:
             probe_fields.update(self.ivf.to_npz_fields())
+        if self.graph_health is not None:
+            probe_fields.update(self.graph_health.to_npz_fields())
         np.savez_compressed(
             path,
             words=np.asarray(self.sigs.words),
@@ -486,6 +534,7 @@ class QuIVerIndex:
                 "repro.stream.MutableQuIVerIndex.load (freeze() it for "
                 "an immutable QuIVerIndex)"
             )
+        from repro.obs.graph import GraphHealthReport
         params = params_from_npz(z)
         vectors = z["vectors"]
         rotation = z["rotation"]
@@ -505,6 +554,7 @@ class QuIVerIndex:
             policy=NavPolicy.from_npz(z),
             report=CompatibilityReport.from_npz(z),
             ivf=IVFPartition.from_npz(z),
+            graph_health=GraphHealthReport.from_npz(z),
         )
 
 

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core.beam import batched_beam_search
 from repro.core.metric import MetricSpace
-from repro.core.prune import alpha_prune_batch
+from repro.core.prune import alpha_prune_batch, alpha_prune_stats_batch
 
 BIG = jnp.float32(3.0e38)
 
@@ -50,8 +50,13 @@ def chunk_forward(
 ):
     """Beam-search a chunk of nodes and alpha-prune their candidates.
 
-    Returns ((B, r) forward ids, (B, r) dists, (B,) hops).  Rows whose
-    ``chunk_ids`` entry is -1 come back all -1.
+    Returns ((B, r) forward ids, (B, r) dists, (B,) hops, (B,) prune
+    pool sizes, (B,) occlusion counts).  The last two are the build
+    telemetry DESIGN.md §15 aggregates — how full each node's candidate
+    pool was when it entered the alpha-prune and how many candidates
+    the diversity criterion occluded (same trace; reductions over masks
+    the prune already computes).  Rows whose ``chunk_ids`` entry is -1
+    come back all -1 / 0.
     """
     pad_row = (chunk_ids < 0)[:, None]
     queries = backend.query_repr(jnp.maximum(chunk_ids, 0))
@@ -70,10 +75,10 @@ def chunk_forward(
 
     safe = jnp.maximum(cids, 0)
     pw = backend.pairwise(safe)
-    fwd_ids, fwd_dists = alpha_prune_batch(
+    fwd_ids, fwd_dists, pool_sizes, occluded = alpha_prune_stats_batch(
         cids, cdists, pw, r=r, alpha=alpha
     )
-    return fwd_ids, fwd_dists, res.hops
+    return fwd_ids, fwd_dists, res.hops, pool_sizes, occluded
 
 
 def scatter_rows(adj, deg, row_ids, edge_ids, *, r_total):

@@ -22,16 +22,12 @@ import jax.numpy as jnp
 BIG = jnp.float32(3.0e38)
 
 
-@functools.partial(jax.jit, static_argnames=("r", "alpha"))
-def alpha_prune(
-    cand_ids: jnp.ndarray,    # (C,) int32, -1 padded
-    cand_dists: jnp.ndarray,  # (C,) float32, distance to target, INF padded
-    pairwise: jnp.ndarray,    # (C, C) float32 candidate-candidate distances
-    *,
-    r: int,
-    alpha: float,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Greedy alpha-diversity selection -> ((r,) ids, (r,) dists)."""
+def _greedy_select(cand_ids, cand_dists, pairwise, *, r, alpha):
+    """Distance-sort + greedy cover loop; the shared core of the prune.
+
+    Returns (sorted ids, sorted dists, selected mask, pruned mask) over
+    the sorted candidate order.
+    """
     c = cand_ids.shape[0]
     valid = cand_ids >= 0
     order = jnp.argsort(jnp.where(valid, cand_dists, BIG))
@@ -53,13 +49,17 @@ def alpha_prune(
         pruned = pruned | covered
         return selected, pruned
 
-    selected, _ = jax.lax.fori_loop(
+    selected, pruned = jax.lax.fori_loop(
         0,
         r,
         step,
         (jnp.zeros((c,), jnp.bool_), jnp.zeros((c,), jnp.bool_)),
     )
-    # compact the <= r selected entries (sorted by distance) into (r,)
+    return ids, dists, selected, pruned
+
+
+def _compact(ids, dists, selected, r):
+    """Compact the <= r selected entries (sorted by distance) into (r,)."""
     rank = jnp.cumsum(selected) - 1        # in-order rank among selected
     slot = jnp.where(selected, rank, r)    # r == overflow bucket for the rest
     out_ids = (
@@ -75,8 +75,57 @@ def alpha_prune(
     return out_ids, out_dists
 
 
+@functools.partial(jax.jit, static_argnames=("r", "alpha"))
+def alpha_prune(
+    cand_ids: jnp.ndarray,    # (C,) int32, -1 padded
+    cand_dists: jnp.ndarray,  # (C,) float32, distance to target, INF padded
+    pairwise: jnp.ndarray,    # (C, C) float32 candidate-candidate distances
+    *,
+    r: int,
+    alpha: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy alpha-diversity selection -> ((r,) ids, (r,) dists)."""
+    ids, dists, selected, _ = _greedy_select(
+        cand_ids, cand_dists, pairwise, r=r, alpha=alpha
+    )
+    return _compact(ids, dists, selected, r)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "alpha"))
+def alpha_prune_stats(
+    cand_ids: jnp.ndarray,
+    cand_dists: jnp.ndarray,
+    pairwise: jnp.ndarray,
+    *,
+    r: int,
+    alpha: float,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`alpha_prune` plus the build-telemetry counts.
+
+    Returns ((r,) ids, (r,) dists, () pool size, () occluded count):
+    *pool* is how many valid candidates entered the prune, *occluded*
+    how many the alpha-criterion covered away (survivors = pool −
+    occluded, bounded by r).  Same trace as ``alpha_prune`` — the
+    counts are reductions over masks the loop already computes.
+    """
+    ids, dists, selected, pruned = _greedy_select(
+        cand_ids, cand_dists, pairwise, r=r, alpha=alpha
+    )
+    out_ids, out_dists = _compact(ids, dists, selected, r)
+    pool = (ids >= 0).sum().astype(jnp.int32)
+    occluded = pruned.sum().astype(jnp.int32)
+    return out_ids, out_dists, pool, occluded
+
+
 def alpha_prune_batch(cand_ids, cand_dists, pairwise, *, r, alpha):
     """vmap over a chunk of targets: (B, C) / (B, C, C) -> (B, r)."""
     return jax.vmap(
         functools.partial(alpha_prune, r=r, alpha=alpha)
+    )(cand_ids, cand_dists, pairwise)
+
+
+def alpha_prune_stats_batch(cand_ids, cand_dists, pairwise, *, r, alpha):
+    """vmap of :func:`alpha_prune_stats`: adds (B,) pool / occluded."""
+    return jax.vmap(
+        functools.partial(alpha_prune_stats, r=r, alpha=alpha)
     )(cand_ids, cand_dists, pairwise)

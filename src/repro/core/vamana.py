@@ -148,11 +148,13 @@ def _chunk_forward_ivf(
         [local_dists, jnp.where(rand_ok, rd, BIG)], axis=-1
     )
     pw = backend.pairwise(jnp.maximum(cids, 0))
-    fwd_ids, fwd_dists = linking.alpha_prune_batch(
-        cids, cdists, pw, r=r, alpha=alpha
+    fwd_ids, fwd_dists, pool_sizes, occluded = (
+        linking.alpha_prune_stats_batch(
+            cids, cdists, pw, r=r, alpha=alpha
+        )
     )
     hops = jnp.zeros(chunk_ids.shape, dtype=jnp.int32)
-    return fwd_ids, fwd_dists, hops
+    return fwd_ids, fwd_dists, hops, pool_sizes, occluded
 
 
 @functools.partial(jax.jit, static_argnames=("r_total",))
@@ -197,6 +199,12 @@ class BuildStats:
     consolidations: int = 0
     reverse_edges_added: int = 0
     mean_hops: float = 0.0
+    # build telemetry (DESIGN.md §15): per-chunk means, averaged over
+    # the whole build; occluded is the total candidate count the
+    # alpha-criterion covered away
+    pool_occupancy: float = 0.0    # mean pool fill / prune_pool
+    survivor_ratio: float = 0.0    # mean survivors / pool
+    occluded_total: int = 0
 
 
 def build_graph(
@@ -262,6 +270,12 @@ def build_graph(
     added_acc = jnp.int32(0)
     hops_sum = jnp.float32(0.0)
     n_hop_chunks = 0
+    occl_acc = jnp.int32(0)
+    # per-chunk device scalars (async-dispatched; one stack+sync at the
+    # end feeds the quiver_build_* histograms without blocking the loop)
+    pool_occ_chunks: list = []
+    surv_chunks: list = []
+    occl_chunks: list = []
 
     for pass_idx in range(params.passes):
         order = rng.permutation(n).astype(np.int32)
@@ -276,7 +290,8 @@ def build_graph(
                 rand_ids = jnp.asarray(rng.integers(
                     0, n, size=(chunk, n_rand), dtype=np.int32
                 ))
-                fwd_ids, fwd_dists, hops = _chunk_forward_ivf(
+                fwd_ids, fwd_dists, hops, pool_sizes, occluded = \
+                    _chunk_forward_ivf(
                     chunk_ids, rand_ids, sig_words,
                     ivf.cent_words, ivf.list_ids,
                     backend=backend,
@@ -287,7 +302,8 @@ def build_graph(
                     probes=probes,
                 )
             else:
-                fwd_ids, fwd_dists, hops = _chunk_forward(
+                fwd_ids, fwd_dists, hops, pool_sizes, occluded = \
+                    _chunk_forward(
                     adj, chunk_ids, medoid_arr,
                     backend=backend,
                     ef=params.ef_construction,
@@ -307,6 +323,19 @@ def build_graph(
             added_acc = added_acc + added
             hops_sum = hops_sum + hops.mean()
             n_hop_chunks += 1
+            real = chunk_ids >= 0
+            denom = jnp.maximum(real.sum(), 1).astype(jnp.float32)
+            pool_mean = jnp.where(real, pool_sizes, 0).sum() / denom
+            surv = jnp.where(
+                real, (fwd_ids >= 0).sum(-1), 0
+            ).sum() / jnp.maximum(
+                jnp.where(real, pool_sizes, 0).sum(), 1
+            ).astype(jnp.float32)
+            occl = jnp.where(real, occluded, 0).sum()
+            occl_acc = occl_acc + occl
+            pool_occ_chunks.append(pool_mean / params.prune_pool)
+            surv_chunks.append(surv)
+            occl_chunks.append(occl)
 
             if (ci + 1) % params.consolidate_every == 0:
                 adj, deg, did = _consolidate_overflow(
@@ -328,6 +357,32 @@ def build_graph(
     stats.mean_hops = (
         float(hops_sum) / n_hop_chunks if n_hop_chunks else 0.0
     )
+    stats.occluded_total = int(occl_acc)
+    if pool_occ_chunks:
+        pool_occ = np.asarray(jnp.stack(pool_occ_chunks))
+        surv = np.asarray(jnp.stack(surv_chunks))
+        occl = np.asarray(jnp.stack(occl_chunks))
+        stats.pool_occupancy = float(pool_occ.mean())
+        stats.survivor_ratio = float(surv.mean())
+        # per-chunk distributions land in the default registry (core
+        # imports obs lazily — same discipline as the index reports)
+        from repro.obs.metrics import get_default_registry
+        reg = get_default_registry()
+        reg.histogram(
+            "quiver_build_pool_occupancy",
+            "per-chunk prune-pool fill ratio at alpha-prune entry",
+            buckets=(0.1, 0.25, 0.5, 0.75, 0.9, 1.0), window=0,
+        ).observe_many(pool_occ)
+        reg.histogram(
+            "quiver_build_survivor_ratio",
+            "per-chunk alpha-prune survivors / pool",
+            buckets=(0.05, 0.1, 0.25, 0.5, 0.75, 1.0), window=0,
+        ).observe_many(surv)
+        reg.histogram(
+            "quiver_build_occluded",
+            "per-chunk candidates occluded by the alpha-criterion",
+            buckets=(1.0, 1e1, 1e2, 1e3, 1e4, 1e5), window=0,
+        ).observe_many(occl)
     stats.seconds = time.perf_counter() - t0
     return adj, int(medoid), stats
 

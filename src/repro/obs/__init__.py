@@ -9,7 +9,12 @@ The observability substrate of the serving stack:
 * :mod:`repro.obs.tracing` — span-based query-lifecycle tracing
   (admission → coalesce → launch → finalize → escalate/degrade);
 * :mod:`repro.obs.sinks` — JSONL / stdout push sinks, Prometheus text
-  exposition and the ``/metrics`` snapshot endpoint;
+  exposition and the ``/metrics`` snapshot endpoint (plus the
+  ``/healthz`` verdict route);
+* :mod:`repro.obs.graph` — the graph X-ray: structural health probes
+  (degrees, reciprocity, medoid reachability, BQ/f32 edge agreement)
+  banded into a calibrated verdict, and the edge-triggered
+  :class:`GraphHealthMonitor`;
 * :mod:`repro.obs.tenant` — token-bucket admission quotas and
   per-tenant SLO accounting (:class:`TenantLedger`);
 * :mod:`repro.obs.drift` — probe-drift alarms: the paper's
@@ -23,6 +28,14 @@ The observability substrate of the serving stack:
 """
 
 from repro.obs.drift import BANDS, DriftAlarm, DriftMonitor
+from repro.obs.graph import (
+    DEFAULT_GRAPH_THRESHOLDS,
+    GraphHealthAlarm,
+    GraphHealthMonitor,
+    GraphHealthReport,
+    GraphThresholds,
+    graph_health_report,
+)
 from repro.obs.hub import ObsHub, PeriodicReporter, autostart
 from repro.obs.metrics import (
     DEFAULT_BUCKETS,
@@ -32,6 +45,7 @@ from repro.obs.metrics import (
     MetricsRegistry,
     Ring,
     get_default_registry,
+    latency_summary,
     reset_default_registry,
 )
 from repro.obs.quality import (
@@ -46,6 +60,7 @@ from repro.obs.sinks import (
     PrometheusServer,
     Sink,
     StdoutSink,
+    health_snapshot,
     render_prometheus,
     sinks_from_env,
 )
@@ -62,11 +77,16 @@ __all__ = [
     "BANDS",
     "Counter",
     "DEFAULT_BUCKETS",
+    "DEFAULT_GRAPH_THRESHOLDS",
     "DEFAULT_RATE",
     "DEFAULT_TENANT",
     "DriftAlarm",
     "DriftMonitor",
     "Gauge",
+    "GraphHealthAlarm",
+    "GraphHealthMonitor",
+    "GraphHealthReport",
+    "GraphThresholds",
     "Histogram",
     "JsonlSink",
     "MetricsRegistry",
@@ -85,6 +105,9 @@ __all__ = [
     "Tracer",
     "autostart",
     "get_default_registry",
+    "graph_health_report",
+    "health_snapshot",
+    "latency_summary",
     "render_prometheus",
     "reset_default_registry",
     "shadow_hash",

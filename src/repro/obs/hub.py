@@ -20,6 +20,7 @@ reporter + Prometheus endpoint from the env (``REPRO_OBS_INTERVAL_S``,
 
 from __future__ import annotations
 
+import atexit
 import os
 import threading
 import time
@@ -45,6 +46,13 @@ class ObsHub:
             tracer if tracer is not None else Tracer(self.registry)
         )
         self.sinks = list(sinks)
+        self._closed = False
+        if self.sinks:
+            # flush-and-close at interpreter exit: a process torn down
+            # without an orderly engine.shutdown() still closes its
+            # flight recorder cleanly (close() is idempotent, so the
+            # orderly path costs nothing extra)
+            atexit.register(self.close)
 
     @classmethod
     def from_env(cls, env=None) -> "ObsHub":
@@ -68,6 +76,11 @@ class ObsHub:
         return record
 
     def close(self) -> None:
+        """Close every sink exactly once (idempotent: engine shutdown
+        and the atexit hook may both land here)."""
+        if self._closed:
+            return
+        self._closed = True
         for sink in self.sinks:
             sink.close()
 
@@ -85,6 +98,7 @@ class PeriodicReporter(threading.Thread):
         self.hub = hub
         self.interval = float(interval)
         self.extra_fn = extra_fn
+        self._stopped = False
         # NB: not named _stop — Thread.join() calls self._stop()
         # internally, and an Event attribute would shadow it
         self._halt = threading.Event()
@@ -97,12 +111,25 @@ class PeriodicReporter(threading.Thread):
         except Exception as e:       # keep the loop alive; surface why
             return {"reporter_error": repr(e)}
 
+    def start(self) -> None:
+        # registered at start (not construction) so only a *running*
+        # loop owes the world a final snapshot; atexit runs LIFO, so
+        # this fires before the hub's own sink-close hook — the flush
+        # lands in an open flight recorder
+        atexit.register(self.stop)
+        super().start()
+
     def run(self) -> None:
         while not self._halt.wait(self.interval):
             self.hub.emit(self._extra())
 
     def stop(self) -> None:
-        """Stop the loop and flush one final snapshot."""
+        """Stop the loop and flush one final snapshot (idempotent:
+        engine shutdown and the atexit hook may both call it, and the
+        snapshot must not be double-emitted)."""
+        if self._stopped:
+            return
+        self._stopped = True
         self._halt.set()
         if self.is_alive():
             self.join(timeout=2 * self.interval)
@@ -110,14 +137,16 @@ class PeriodicReporter(threading.Thread):
 
 
 def autostart(
-    hub: ObsHub, *, extra_fn=None, env=None
+    hub: ObsHub, *, extra_fn=None, health_fn=None, env=None
 ) -> tuple[PeriodicReporter | None, PrometheusServer | None]:
     """Start the push loop / scrape endpoint the env asks for.
 
     ``REPRO_OBS_INTERVAL_S`` (default 5) paces the reporter — started
     only when the hub has sinks to feed; ``REPRO_METRICS_PORT`` starts
-    the Prometheus snapshot endpoint on that port.  Returns whichever
-    were started (callers ``stop()``/``close()`` them on shutdown).
+    the Prometheus snapshot endpoint on that port (``health_fn`` —
+    typically ``engine.health_verdicts`` — adds its ``GET /healthz``
+    verdict route).  Returns whichever were started (callers
+    ``stop()``/``close()`` them on shutdown).
     """
     env = os.environ if env is None else env
     reporter = server = None
@@ -128,5 +157,6 @@ def autostart(
         reporter.start()
     port = env.get("REPRO_METRICS_PORT")
     if port:
-        server = PrometheusServer(hub.registry, port=int(port))
+        server = PrometheusServer(hub.registry, port=int(port),
+                                  health_fn=health_fn)
     return reporter, server

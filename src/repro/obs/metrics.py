@@ -85,6 +85,21 @@ class Ring:
         return float(np.percentile(self._buf[: len(self)], q))
 
 
+def latency_summary(ring: Ring, quantiles=(50, 99)) -> dict:
+    """``{"p<q>_ms": ...}`` from a Ring of *seconds*.
+
+    The one place window percentiles become report fields — the serve
+    engine's ``stats_report`` and the tenant ledger used to each carry
+    their own copy of this scale-and-round.  Empty windows report
+    ``None`` for every quantile (absence of evidence, not 0ms).
+    """
+    out = {}
+    for q in quantiles:
+        v = ring.percentile(q)
+        out[f"p{int(q)}_ms"] = None if v is None else round(v * 1e3, 3)
+    return out
+
+
 def _label_key(label_names, labels: dict) -> tuple:
     if set(labels) != set(label_names):
         raise ValueError(

@@ -40,7 +40,7 @@ import time
 
 from repro.obs.metrics import MetricsRegistry, get_default_registry
 
-ACTIONS = ("reprobe", "replan", "escalate_ef", "flag_red")
+ACTIONS = ("reprobe", "replan", "escalate_ef", "consolidate", "flag_red")
 
 
 class RemediationPolicy:
@@ -124,6 +124,25 @@ class RemediationPolicy:
             "value": alarm.value,
         })
 
+    def attach_graph(self, monitor) -> "RemediationPolicy":
+        """Subscribe to a :class:`~repro.obs.graph.GraphHealthMonitor`'s
+        structural band crossings (chainable, like :meth:`attach`).
+        Graph triggers walk their own short ladder in :meth:`step`:
+        amber is a topology-repair problem (consolidate / replan
+        recommendation), not an ef problem — spending beam width on a
+        disconnected graph buys nothing."""
+        monitor.subscribe(self._on_graph)
+        return self
+
+    def _on_graph(self, alarm) -> None:
+        self._trigger({
+            "kind": "graph_health",
+            "tenant": alarm.tenant,
+            "band": alarm.band,
+            "stat": alarm.stat,
+            "value": alarm.value,
+        })
+
     def _on_breach(self, event: dict) -> None:
         self._trigger(dict(event))         # kind == "recall_slo"
 
@@ -154,6 +173,8 @@ class RemediationPolicy:
             # already at the bottom: nothing cheaper left to try
             return self._emit("flag_red", kind, trigger,
                               note="already red-flagged")
+        if kind == "graph_health":
+            return self._step_graph(trigger)
         report = self._reprobe()
         self.last_report = report
         verdict = report.verdict if report is not None else "amber"
@@ -183,6 +204,33 @@ class RemediationPolicy:
         if current != fallback:
             self.index.replan(nav=fallback, source="remediation:red")
         return self._emit("flag_red", kind, trigger, nav=fallback)
+
+    def _step_graph(self, trigger: dict) -> dict:
+        """The structural branch of the ladder.  Amber means the
+        topology needs *repair*, so the cheapest plausible action is a
+        consolidation cycle (splice-and-reprune, slot reclamation) when
+        the index is mutable — an immutable snapshot gets a
+        consolidate/replan recommendation instead.  Red means the graph
+        contradicts its own metric space (mass unreachability, BQ/f32
+        edge disagreement): no serve-time knob fixes that, so flag for
+        a rebuild through the probe (``build(nav="auto")``)."""
+        band = trigger.get("band", "amber")
+        if band == "red":
+            self.flagged_red = True
+            return self._emit("flag_red", "graph_health", trigger,
+                              note="rebuild-through-probe")
+        idx = self.index
+        if hasattr(idx, "consolidate"):
+            rep = idx.consolidate()
+            return self._emit(
+                "consolidate", "graph_health", trigger,
+                repaired=int(rep.get("repaired_rows", 0)),
+                reclaimed=int(rep.get("reclaimed", 0)),
+            )
+        return self._emit(
+            "consolidate", "graph_health", trigger,
+            note="immutable snapshot: consolidate/replan at next swap",
+        )
 
     def resolve(self, note: str = "operator resolve") -> None:
         """Clear the red flag and restore the original ef bucket —

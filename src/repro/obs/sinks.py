@@ -62,6 +62,7 @@ class JsonlSink(Sink):
         self.keep = int(keep)
         self._fh = self.path.open("a")
         self._lock = threading.Lock()
+        self._closed = False
 
     def _rotate(self) -> None:
         self._fh.close()
@@ -77,6 +78,10 @@ class JsonlSink(Sink):
     def emit(self, record: dict) -> None:
         line = json.dumps(record, default=_json_default) + "\n"
         with self._lock:
+            if self._closed:
+                # a straggler snapshot after close (reporter's atexit
+                # flush racing the hub's) is dropped, not a crash
+                return
             if (
                 self.max_bytes > 0
                 and self._fh.tell() > 0
@@ -88,6 +93,9 @@ class JsonlSink(Sink):
 
     def close(self) -> None:
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             self._fh.close()
 
 
@@ -122,6 +130,38 @@ def _json_default(o):
         return float(o)
     except (TypeError, ValueError):
         return str(o)
+
+
+# -- health verdicts -------------------------------------------------------
+
+
+_BAND_ORDER = {"green": 0, "amber": 1, "red": 2}
+
+
+def health_snapshot(health_fn) -> tuple[dict, int]:
+    """Evaluate ``health_fn`` into a ``/healthz`` body + HTTP status.
+
+    ``health_fn`` returns ``{component: verdict}`` (e.g. graph / drift
+    / recall-SLO bands); the overall verdict is the *worst* band and
+    the status is 503 only on red — amber is degraded-but-serving, a
+    scraper page not a load-balancer eviction.  A crashing probe is
+    itself a red verdict: the endpoint must never take the server down,
+    and "health check broken" is not health.
+    """
+    components: dict = {}
+    if health_fn is not None:
+        try:
+            components = dict(health_fn())
+        except Exception as e:
+            components = {"health_probe": "red", "error": repr(e)}
+    worst = "green"
+    for v in components.values():
+        if _BAND_ORDER.get(v, 0) > _BAND_ORDER[worst]:
+            worst = v
+    return (
+        {"verdict": worst, "components": components},
+        503 if worst == "red" else 200,
+    )
 
 
 # -- Prometheus text exposition -------------------------------------------
@@ -173,16 +213,34 @@ class PrometheusServer:
     Stdlib ``ThreadingHTTPServer`` on a daemon thread — a scrape reads
     whatever the registry holds at that instant; nothing blocks the
     serving loop.  ``port=0`` binds an ephemeral port (tests).
+
+    ``health_fn`` (optional) adds a ``GET /healthz`` liveness verdict:
+    a JSON body of per-component bands (graph topology, probe drift,
+    recall SLO — whatever the caller wires in) with 200 while no
+    component reads red and 503 once one does, so a load balancer can
+    evict a replica whose graph has structurally collapsed without
+    parsing the full metrics exposition.
     """
 
     def __init__(self, registry: MetricsRegistry, port: int = 0,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", health_fn=None):
         self.registry = registry
+        self.health_fn = health_fn
         outer = self
 
         class Handler(http.server.BaseHTTPRequestHandler):
             def do_GET(self):
-                if self.path.rstrip("/") not in ("", "/metrics"):
+                path = self.path.rstrip("/")
+                if path == "/healthz":
+                    record, status = health_snapshot(outer.health_fn)
+                    body = json.dumps(record).encode()
+                    self.send_response(status)
+                    self.send_header("Content-Type", "application/json")
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                    return
+                if path not in ("", "/metrics"):
                     self.send_error(404)
                     return
                 body = render_prometheus(outer.registry).encode()

@@ -26,9 +26,14 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from repro.obs.metrics import MetricsRegistry, Ring
+from repro.obs.metrics import MetricsRegistry, Ring, latency_summary
 
 DEFAULT_TENANT = "default"
+
+# per-stat navigation-trace window (hops/evals/descent/... per tenant);
+# smaller than the latency window — nav traces are per *query*, not per
+# request, and the report only needs a current-behaviour p50
+NAV_WINDOW = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +90,7 @@ class TenantStats:
     rejected_queries: int = 0
     latencies: Ring = None           # set by the ledger (window-sized)
     recalls: Ring = None             # shadow recall@k window (ledger-set)
+    nav: dict = None                 # {stat: Ring} beam nav counters
     recall_breaches: int = 0         # breached-state entries (not samples)
     recall_breached: bool = False    # currently below the recall SLO
 
@@ -163,6 +169,7 @@ class TenantLedger:
             s = self._stats[tenant] = TenantStats(
                 latencies=Ring(self.latency_window),
                 recalls=Ring(self.recall_window),
+                nav={},
             )
         return s
 
@@ -215,6 +222,20 @@ class TenantLedger:
             s.latencies.append(latency)
             if self._reg is not None:
                 self._h_latency.observe(latency, tenant=tenant)
+
+    def observe_nav(self, tenant: str, traces: dict) -> None:
+        """Account one request's navigation counters: ``traces`` maps a
+        stat name (``hops``/``evals``/``descent``/...) to that tenant's
+        per-query values from the finalized batch.  Each stat rides its
+        own bounded Ring so the report shows *current* navigation
+        behaviour — a tenant whose hops p50 climbs while recall still
+        holds is walking a degrading graph (DESIGN.md §15)."""
+        s = self.stats(tenant)
+        for stat, vals in traces.items():
+            ring = s.nav.get(stat)
+            if ring is None:
+                ring = s.nav[stat] = Ring(NAV_WINDOW)
+            ring.extend(vals)
 
     # -- recall SLO --------------------------------------------------------
 
@@ -287,14 +308,7 @@ class TenantLedger:
                 "degraded": s.degraded,
                 "queries": s.queries,
                 "rejected_queries": s.rejected_queries,
-                "p50_ms": (
-                    round(lat.percentile(50) * 1e3, 3)
-                    if len(lat) else None
-                ),
-                "p99_ms": (
-                    round(lat.percentile(99) * 1e3, 3)
-                    if len(lat) else None
-                ),
+                **latency_summary(lat),
                 "quota_qps": q.qps if q else None,
                 "quota_burst": q.capacity() if q else None,
                 "recall_p50": (
@@ -309,5 +323,11 @@ class TenantLedger:
                 ),
                 "recall_breaches": s.recall_breaches,
                 "recall_breached": s.recall_breached,
+                "nav": {
+                    stat: {"p50": round(r.percentile(50), 3),
+                           "n": len(r)}
+                    for stat, r in sorted((s.nav or {}).items())
+                    if len(r)
+                },
             }
         return out

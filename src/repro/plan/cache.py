@@ -35,6 +35,30 @@ from repro.plan.plan import PlanContext, QueryPlan
 
 _CACHE_IDS = itertools.count()
 
+# navigation-path trace statistics (DESIGN.md §15): column order of the
+# (Q, 5) nav array the graph programs return, with the fixed histogram
+# buckets each lands in (windowless — hot-path observes stay vectorized)
+NAV_STATS = (
+    ("hops", (1, 2, 4, 8, 16, 32, 64, 128, 256)),
+    ("evals", (32, 64, 128, 256, 512, 1024, 2048, 4096, 8192)),
+    ("descent", (0.0, 1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0,
+                 16384.0)),
+    ("stalls", (0, 1, 2, 4, 8, 16, 32, 64)),
+    ("entry_rank", (0, 1, 2, 4, 8, 16, 32, 64, 128)),
+)
+
+
+def _nav_trace(res) -> jnp.ndarray:
+    """Stack a batched BeamResult's per-query counters into the (Q, 5)
+    nav-trace array (float32: one dtype, one transfer)."""
+    return jnp.stack([
+        res.hops.astype(jnp.float32),
+        res.evals.astype(jnp.float32),
+        res.descent.astype(jnp.float32),
+        res.stalls.astype(jnp.float32),
+        res.entry_rank.astype(jnp.float32),
+    ], axis=-1)
+
 
 def _normalize(x: jnp.ndarray) -> jnp.ndarray:
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
@@ -48,14 +72,18 @@ class PendingResult:
     host→device transfer with this batch's compute (double buffering).
     """
 
-    __slots__ = ("plan", "ctx", "queries", "reprs", "chunks")
+    __slots__ = ("plan", "ctx", "queries", "reprs", "chunks", "nav")
 
     def __init__(self, plan, ctx, queries, reprs, chunks):
         self.plan = plan
         self.ctx = ctx
         self.queries = queries       # (Q, D) normalized, device
         self.reprs = reprs           # encoded queries, device
-        self.chunks = chunks         # [(ids, scores, margins, real), ...]
+        self.chunks = chunks         # [(ids, scores, margins, nav, real)]
+        # (Q, 5) host float32 nav-trace rows [hops, evals, descent,
+        # stalls, entry_rank] — populated by finalize() when the cache
+        # has an obs hub and the plan traverses the graph; None otherwise
+        self.nav = None
 
 
 class PlanCache:
@@ -121,7 +149,7 @@ class PlanCache:
                 ids, scores = rerank(res.ids, res.dists, queries,
                                      vectors, plan.k)
                 margins = beam_margin(res.dists, plan.k, neutral)
-                return ids, scores, margins
+                return ids, scores, margins, _nav_trace(res)
         else:
             def program(reprs, queries, adjacency, vectors, start):
                 res = batched_beam_search(
@@ -131,7 +159,7 @@ class PlanCache:
                 ids, scores = rerank(res.ids, res.dists, queries,
                                      vectors, plan.k)
                 margins = beam_margin(res.dists, plan.k, neutral)
-                return ids, scores, margins
+                return ids, scores, margins, _nav_trace(res)
 
         return trace.counting_jit(
             program, name=self._tag + plan.signature()
@@ -249,8 +277,11 @@ class PlanCache:
                         index.adjacency, vectors, start)
             if plan.filtered:
                 args += (ctx.result_valid,)
-            ids, scores, margins = prog(*args)
-            chunks.append((ids, scores, margins, real))
+            out = prog(*args)
+            # graph programs return a 4th (nav-trace) array; the ivf
+            # route has no traversal to trace
+            nav = out[3] if len(out) > 3 else None
+            chunks.append((out[0], out[1], out[2], nav, real))
         if obs is not None:
             self._stage_hist(obs).observe(
                 obs.tracer.clock() - t0,
@@ -275,13 +306,29 @@ class PlanCache:
         t0 = obs.tracer.clock() if obs is not None else 0.0
         if plan.route == "brute":
             return self._run_brute(plan, ctx, pending.queries)
-        out_ids, out_scores, out_margin = [], [], []
-        for ids, scores, margins, real in pending.chunks:
+        out_ids, out_scores, out_margin, out_nav = [], [], [], []
+        for ids, scores, margins, nav, real in pending.chunks:
             out_ids.append(np.asarray(ids[:real]))
             out_scores.append(np.asarray(scores[:real]))
             out_margin.append(np.asarray(margins[:real]))
+            if obs is not None and nav is not None:
+                out_nav.append(np.asarray(nav[:real]))
         all_ids = np.concatenate(out_ids)
         all_scores = np.concatenate(out_scores)
+        if out_nav:
+            # nav-path tracing (DESIGN.md §15): the counters ride the
+            # compiled program either way; host transfer + histogram
+            # observes only happen with an obs hub attached
+            pending.nav = np.concatenate(out_nav)
+            for col, (stat, buckets) in enumerate(NAV_STATS):
+                obs.registry.histogram(
+                    f"quiver_nav_{stat}",
+                    f"per-query beam {stat} by nav family and plan",
+                    labels=("nav", "plan"), buckets=buckets, window=0,
+                ).observe_many(
+                    pending.nav[:, col],
+                    nav=plan.nav, plan=plan.signature(),
+                )
         if obs is not None:
             self._stage_hist(obs).observe(
                 obs.tracer.clock() - t0,

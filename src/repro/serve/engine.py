@@ -43,8 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import DEFAULT_TENANT, ObsHub, Ring, Span, TenantLedger
+from repro.obs.metrics import latency_summary
 from repro.obs.quality import ShadowSampler
 from repro.plan import resolve_plan, trace
+from repro.plan.cache import NAV_STATS
 from repro.plan.plan import PlanContext, QueryPlan
 
 
@@ -390,11 +392,20 @@ class QueryEngine:
                 ids, scores = self.index.plans.finalize(pending)
             t_done = self.clock()
             self._observe(plan, t_done - t0)
+            # nav traces (graph plans only; the cache populates them at
+            # finalize when obs is armed) scatter to the same per-ticket
+            # row ranges as the results
+            nav = getattr(pending, "nav", None)
             row = 0
             for t in tickets:
                 nq = len(t.queries)
                 self._results[t.id] = (ids[row:row + nq],
                                        scores[row:row + nq])
+                if nav is not None:
+                    self.tenants.observe_nav(t.tenant, {
+                        stat: nav[row:row + nq, col]
+                        for col, (stat, _) in enumerate(NAV_STATS)
+                    })
                 row += nq
                 if self.shadow is not None:
                     # offer only: a copy of the sampled rows; ground
@@ -569,8 +580,7 @@ class QueryEngine:
             "degraded": self.stats.degraded,
             "rejected": self.stats.rejected,
             "latency_window": lat.maxlen,
-            "p50_ms": (lat.percentile(50) * 1e3) if len(lat) else None,
-            "p99_ms": (lat.percentile(99) * 1e3) if len(lat) else None,
+            **latency_summary(lat),
         }
         out["tenant_report"] = self.tenants.report()
         if self.shadow is not None:
@@ -585,12 +595,49 @@ class QueryEngine:
         )
         return out
 
+    def health_verdicts(self) -> dict:
+        """Per-component liveness bands for ``GET /healthz``: the
+        graph's last structural X-ray, the probe-drift monitor's band,
+        and the recall SLO (red while any tenant is breaching).  A
+        component with no monitor attached is simply absent — absence
+        reads green, so a bare engine stays servable."""
+        out = {}
+        gh = getattr(self.index, "graph_health", None)
+        if gh is not None:
+            out["graph"] = gh.verdict
+        gm = getattr(self.index, "graph_monitor", None)
+        if gm is not None and gm.band is not None:
+            out["graph"] = gm.band
+        dm = getattr(self.index, "drift_monitor", None)
+        if dm is not None and dm.band is not None:
+            out["drift"] = dm.band
+        breached = [
+            t for t in self.tenants.tenants()
+            if self.tenants.recall_breached(t)
+        ]
+        out["recall_slo"] = "red" if breached else "green"
+        return out
+
     def emit_report(self) -> dict:
         """Push one ``stats_report`` snapshot through the hub's sinks
         (the :class:`~repro.obs.PeriodicReporter` calls this)."""
         report = self.stats_report()
         if self.obs is not None:
             return self.obs.emit({"stats_report": report})
+        return report
+
+    def shutdown(self) -> dict:
+        """Flush the final telemetry window and close the hub.
+
+        Emits one last ``stats_report`` through the sinks, then stops
+        the hub's reporters and closes its sinks (idempotent — the
+        hub's own ``atexit`` hook makes a second call a no-op).  Call
+        this at the end of short-lived benchmark/CLI processes so the
+        final window is never dropped.
+        """
+        report = self.emit_report()
+        if self.obs is not None:
+            self.obs.close()
         return report
 
 

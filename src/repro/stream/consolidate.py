@@ -52,7 +52,7 @@ def link_chunk(
     never target tombstones, then forward rows are installed and
     reverse edges scatter-appended — the shared batch-build primitives.
     """
-    fwd_ids, _, _ = linking.chunk_forward(
+    fwd_ids, _, _, _, _ = linking.chunk_forward(
         backend, adj, chunk_ids, medoid,
         ef=ef, pool=pool, r=r, alpha=alpha, n=n, expand=expand,
         node_valid=live,

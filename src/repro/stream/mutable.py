@@ -266,6 +266,11 @@ class MutableQuIVerIndex:
         # optional probe-drift monitor (DESIGN.md §12): re-scores the
         # accumulator against the calibrated bands after every mutation
         self.drift_monitor = None
+        # structural X-ray (DESIGN.md §15): the last GraphHealthReport
+        # plus the optional band-crossing monitor that consolidate()
+        # re-checks every cycle
+        self.graph_health = None
+        self.graph_monitor = None
 
     # -- constructors ------------------------------------------------------
 
@@ -300,6 +305,7 @@ class MutableQuIVerIndex:
         out.allocated[:n] = True
         out.size = n
         out.medoid = int(index.medoid)
+        out.graph_health = index.graph_health
         if index.labels is not None:
             out.labels = index.labels.padded_to(capacity)
         return out
@@ -437,6 +443,63 @@ class MutableQuIVerIndex:
         monitor.check()                     # establish the current band
         return monitor
 
+    # -- structural health (graph X-ray, DESIGN.md §15) --------------------
+
+    def graph_report(
+        self,
+        *,
+        sample: int = 256,
+        agreement_k: int = 8,
+        max_hops: int = 64,
+        seed: int = 0,
+        thresholds=None,
+        registry=None,
+    ):
+        """Compute (and cache as ``graph_health``) the structural
+        :class:`~repro.obs.graph.GraphHealthReport` over the live set:
+        tombstoned rows route in the BFS but never count as unreachable,
+        and tombstone density itself is one of the banded statistics."""
+        if self.n_live == 0:
+            raise ValueError("cannot X-ray an empty index")
+        from repro.obs.graph import (
+            DEFAULT_GRAPH_THRESHOLDS,
+            graph_health_report,
+        )
+        self.graph_health = graph_health_report(
+            self.adjacency,
+            medoid=max(self.medoid, 0),
+            words=self.words if self.vectors is not None else None,
+            dim=self.dim,
+            vectors=self.vectors,
+            live=self.live,
+            allocated=self.allocated,
+            sample=sample,
+            agreement_k=agreement_k,
+            max_hops=max_hops,
+            seed=seed,
+            thresholds=thresholds or DEFAULT_GRAPH_THRESHOLDS,
+            registry=registry,
+        )
+        return self.graph_health
+
+    def attach_graph_monitor(self, monitor=None, *, tenant="default",
+                             registry=None, **monitor_kw):
+        """Arm graph-health banding: every :meth:`consolidate` cycle
+        re-X-rays the live graph and band *worsenings* raise
+        :class:`~repro.obs.graph.GraphHealthAlarm`s (the trigger class
+        :class:`~repro.obs.remediate.RemediationPolicy.attach_graph`
+        subscribes to).  The first check runs now, so arming an already
+        degraded graph alarms immediately.  Returns the monitor."""
+        if monitor is None:
+            from repro.obs.graph import GraphHealthMonitor
+            monitor = GraphHealthMonitor(
+                tenant=tenant, registry=registry, **monitor_kw,
+            )
+        self.graph_monitor = monitor
+        if self.n_live:
+            monitor.check(self.graph_report(registry=registry))
+        return monitor
+
     def replan(
         self,
         *,
@@ -539,6 +602,11 @@ class MutableQuIVerIndex:
             out["nav_policy"] = self.policy.describe()
             out["probe_verdict"] = (
                 self.report.verdict if self.report is not None else "n/a"
+            )
+        if self.graph_health is not None:
+            out["graph_verdict"] = self.graph_health.verdict
+            out["graph_health_score"] = round(
+                self.graph_health.health_score, 4
             )
         return out
 
@@ -749,6 +817,18 @@ class MutableQuIVerIndex:
         self.stats.slots_reclaimed += report["reclaimed"]
         self.generation += 1
         self._note_mutation("consolidate", 1)
+        # per-cycle health delta: re-X-ray the repaired graph so the
+        # monitor's delta gauge tracks what each consolidation bought
+        # (or failed to buy) and band worsenings reach the remediation
+        # ladder before shadow recall moves
+        if self.graph_monitor is not None and self.n_live:
+            prev = self.graph_monitor.last_score
+            rep = self.graph_report()
+            self.graph_monitor.check(rep)
+            report["health_score"] = rep.health_score
+            report["health_band"] = rep.verdict
+            if prev is not None:
+                report["health_delta"] = rep.health_score - prev
         return report
 
     # -- search ------------------------------------------------------------
@@ -923,6 +1003,7 @@ class MutableQuIVerIndex:
             policy=self.policy,
             report=self.report,
             ivf=ivf,
+            graph_health=self.graph_health,
         )
 
     # -- persistence -------------------------------------------------------
@@ -936,6 +1017,8 @@ class MutableQuIVerIndex:
             probe_fields.update(self.policy.to_npz_fields())
         if self.report is not None:
             probe_fields.update(self.report.to_npz_fields())
+        if self.graph_health is not None:
+            probe_fields.update(self.graph_health.to_npz_fields())
         np.savez_compressed(
             path,
             stream_format=np.int64(1),
@@ -995,6 +1078,8 @@ class MutableQuIVerIndex:
         out.generation = int(z["generation"])
         out.policy = NavPolicy.from_npz(z)
         out.report = CompatibilityReport.from_npz(z)
+        from repro.obs.graph import GraphHealthReport
+        out.graph_health = GraphHealthReport.from_npz(z)
         # the accumulator is derived state: recompute from the live rows
         # (exactly what the incremental path would have maintained)
         out.probe_acc = ProbeAccumulator.from_words(
